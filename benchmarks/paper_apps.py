@@ -1,0 +1,134 @@
+"""Paper figures/tables from the simulator: Fig 6, Fig 7, Fig 8, Fig 9,
+Table 3. Each runner prints CSV rows and returns them as dicts."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.simulator import MachineConfig, run_trace
+from benchmarks.traces import APPS, kmeans
+
+# Working-set sweep relative to the (scaled) LLC; the paper runs 25%-400%.
+# 4.0 is included only with --full-size traces (simulation time).
+FRACS = (0.25, 0.5, 1.0, 2.0)
+
+
+def _run(mc: MachineConfig, app: str, version: str, frac: float,
+         **kw) -> tuple[dict, dict]:
+    builder, _ = APPS[app]
+    trace, meta = builder(mc, version, frac, **kw)
+    t0 = time.time()
+    res = run_trace(mc, trace)
+    res["wall_s"] = time.time() - t0
+    return res, meta
+
+
+def fig6_speedup(mc: MachineConfig, quick: bool = False) -> list[dict]:
+    """Per-app speedup of DUP and CCache relative to FGL vs. working set."""
+    rows = []
+    fracs = (0.5, 2.0) if quick else FRACS
+    for app, (_, versions) in APPS.items():
+        for frac in fracs:
+            base = None
+            for version in versions:
+                res, meta = _run(mc, app, version, frac)
+                if version == "fgl":
+                    base = res["cycles_max"]
+                speedup = base / max(res["cycles_max"], 1)
+                rows.append({
+                    "figure": "fig6", "app": app, "version": version,
+                    "llc_frac": frac, "cycles": res["cycles_max"],
+                    "speedup_vs_fgl": round(speedup, 3),
+                    "llc_miss": res["llc_miss"],
+                    "invalidations": res["invalidations"],
+                    "evict_merges": res["evict_merges"],
+                    "flush_merges": res["flush_merges"],
+                })
+    return rows
+
+
+def fig7_half_llc(mc: MachineConfig, quick: bool = False) -> list[dict]:
+    """CCache with HALF the LLC vs. DUP with the full LLC, equal absolute
+    working set (= the full-size LLC capacity)."""
+    rows = []
+    half = MachineConfig(scale=mc.scale * 2)
+    for app in APPS:
+        if quick and app not in ("kv_store", "bfs"):
+            continue
+        dup_version = "dup"
+        res_d, _ = _run(mc, app, dup_version, 1.0)
+        # same absolute working set on the halved machine = 2x its LLC
+        res_c, _ = _run(half, app, "ccache", 2.0)
+        rows.append({
+            "figure": "fig7", "app": app,
+            "dup_cycles_fullLLC": res_d["cycles_max"],
+            "ccache_cycles_halfLLC": res_c["cycles_max"],
+            "ccache_speedup_with_half_llc":
+                round(res_d["cycles_max"] / max(res_c["cycles_max"], 1), 3),
+        })
+    return rows
+
+
+def table3_memory(mc: MachineConfig) -> list[dict]:
+    """Peak memory overhead of FGL/DUP normalized to CCache (analytic from
+    the trace layouts)."""
+    rows = []
+    for app, (builder, versions) in APPS.items():
+        foot = {}
+        for version in versions:
+            _, meta = builder(mc, version, 1.0)
+            foot[version] = meta["footprint_lines"]
+        base = foot["ccache"]
+        rows.append({"figure": "table3", "app": app,
+                     **{f"{v}_over_ccache": round(foot[v] / base, 2)
+                        for v in foot}})
+    return rows
+
+
+def fig8_characterization(mc: MachineConfig, quick: bool = False
+                          ) -> list[dict]:
+    """Invalidations / LLC misses / directory accesses per 1k cycles."""
+    rows = []
+    fracs = (1.0,) if quick else (0.5, 2.0)
+    for app, (_, versions) in APPS.items():
+        for frac in fracs:
+            for version in versions:
+                res, _ = _run(mc, app, version, frac)
+                kcyc = max(res["cycles_max"], 1) / 1000
+                rows.append({
+                    "figure": "fig8", "app": app, "version": version,
+                    "llc_frac": frac,
+                    "inval_per_kcyc": round(res["invalidations"] / kcyc, 3),
+                    "llc_miss_per_kcyc": round(res["llc_miss"] / kcyc, 3),
+                    "directory_per_kcyc": round(res["directory"] / kcyc, 3),
+                })
+    return rows
+
+
+def fig9_merge_on_evict(mc: MachineConfig) -> list[dict]:
+    """Merge-count reduction from merge-on-evict (vs. eager merging) and the
+    dirty-merge silent-eviction count (PageRank's 24x fewer merges)."""
+    rows = []
+    # K-means: eager merges after every point vs. merge-on-evict.
+    for version in ("ccache", "ccache_eager"):
+        trace, _ = kmeans(mc, version, 1.0)
+        res = run_trace(mc, trace)
+        rows.append({"figure": "fig9", "app": "kmeans", "version": version,
+                     "total_merges": res["evict_merges"] + res["flush_merges"],
+                     "evict_merges": res["evict_merges"],
+                     "flush_merges": res["flush_merges"],
+                     "silent_evicts": res["silent_evicts"]})
+    eager = rows[-1]["total_merges"]
+    opt = rows[-2]["total_merges"]
+    rows.append({"figure": "fig9", "app": "kmeans",
+                 "version": "reduction",
+                 "merge_reduction_x": round(eager / max(opt, 1), 1)})
+    # PageRank dirty-merge: silent evictions = merges avoided on clean CData.
+    res, _ = _run(mc, "pagerank", "ccache", 1.0)
+    merges = res["evict_merges"] + res["flush_merges"]
+    rows.append({"figure": "fig9", "app": "pagerank", "version": "ccache",
+                 "total_merges": merges,
+                 "silent_evicts": res["silent_evicts"],
+                 "dirty_merge_reduction_x":
+                     round((merges + res["silent_evicts"]) / max(merges, 1), 2)})
+    return rows

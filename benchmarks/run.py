@@ -1,0 +1,96 @@
+"""Benchmark harness: one runner per paper table/figure + LM-tier benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6,...]
+
+Emits CSV-ish JSON rows; summary derivations at the end mirror the paper's
+headline claims (CCache speedup over FGL/DUP, half-LLC result, memory
+overheads, merge-on-evict reductions).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _emit(rows: list[dict]) -> None:
+    for r in rows:
+        print(json.dumps(r))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scale", type=int, default=8,
+                    help="hierarchy divisor vs Table 2 (1 = full size)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig6,fig7,fig8,fig9,table3,lm")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks.paper_apps import (fig6_speedup, fig7_half_llc,
+                                       fig8_characterization,
+                                       fig9_merge_on_evict, table3_memory)
+    from benchmarks.simulator import MachineConfig
+
+    mc = MachineConfig(scale=args.scale)
+    t0 = time.time()
+    summary: dict = {}
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    if want("fig6"):
+        rows = fig6_speedup(mc, quick=args.quick)
+        _emit(rows)
+        cc = [r["speedup_vs_fgl"] for r in rows if r["version"] == "ccache"]
+        dup = [r["speedup_vs_fgl"] for r in rows if r["version"] == "dup"]
+        summary["fig6_ccache_speedup_max"] = max(cc)
+        summary["fig6_ccache_speedup_min"] = min(cc)
+        summary["fig6_dup_speedup_max"] = max(dup)
+
+    if want("table3"):
+        rows = table3_memory(mc)
+        _emit(rows)
+        summary["table3"] = {r["app"]: {k: v for k, v in r.items()
+                                        if k.endswith("_over_ccache")}
+                             for r in rows}
+
+    if want("fig9"):
+        rows = fig9_merge_on_evict(mc)
+        _emit(rows)
+        for r in rows:
+            if "merge_reduction_x" in r:
+                summary["fig9_kmeans_merge_on_evict_x"] = r["merge_reduction_x"]
+            if "dirty_merge_reduction_x" in r:
+                summary["fig9_pagerank_dirty_merge_x"] = r["dirty_merge_reduction_x"]
+
+    if want("fig7"):
+        rows = fig7_half_llc(mc, quick=args.quick)
+        _emit(rows)
+        summary["fig7_half_llc_speedup"] = {
+            r["app"]: r["ccache_speedup_with_half_llc"] for r in rows}
+
+    if want("fig8") and not args.quick:
+        _emit(fig8_characterization(mc, quick=False))
+
+    if want("lm"):
+        from benchmarks.lm_tier import (bench_cscatter, bench_grad_accum,
+                                        bench_merge_paths)
+        rows = bench_merge_paths()
+        _emit(rows)
+        wire = {r.get("case"): r.get("wire_bytes_per_device")
+                for r in rows if "case" in r}
+        if wire.get("tree_flexible") and wire.get("tree_int8_compressed"):
+            summary["lm_int8_wire_reduction_x"] = round(
+                wire["tree_flexible"] / wire["tree_int8_compressed"], 2)
+        _emit(bench_grad_accum())
+        _emit(bench_cscatter())
+
+    summary["wall_s"] = round(time.time() - t0, 1)
+    print(json.dumps({"summary": summary}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

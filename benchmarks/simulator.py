@@ -1,0 +1,385 @@
+"""Multicore cache simulator (the paper's Section 5 evaluation vehicle),
+written as a JAX ``lax.scan`` over an interleaved access trace.
+
+Models the Table-2 machine: 8 cores, private L1/L2, shared LLC with a
+directory (sharer bitmask per line), main memory, a per-core fully
+associative 8-entry source buffer for CData, and software merge functions
+with a fixed merge latency. Coherent accesses pay MESI-style costs
+(invalidations on writes, directory lookups at the LLC); CData accesses
+(c_read/c_write) bypass coherence entirely and pay source-buffer/L1 costs,
+merging on eviction or at explicit merge instructions — exactly the CCache
+contract (paper Section 4).
+
+Simplifications vs. a full MESI model (documented in EXPERIMENTS.md):
+back-invalidations on LLC evictions are not modeled; lock contention is
+modeled through coherence traffic on lock lines (not spin cycles); remote
+dirty-hit forwarding costs the LLC latency.
+
+Op codes (traces.py):
+  0 READ    coherent load
+  1 WRITE   coherent store (write-allocate, invalidates sharers)
+  2 CREAD   CData load  (privatize on miss)
+  3 CWRITE  CData store (privatize on miss, set dirty)
+  4 ATOMIC  coherent RMW (lock acquire / CAS)
+  5 MERGE   flush this core's source buffer (merge instruction)
+  6 BARRIER cycles[core] = max(all cycles)
+  7 NOP     padding
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+READ, WRITE, CREAD, CWRITE, ATOMIC, MERGE, BARRIER, NOP = range(8)
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineConfig:
+    """Table 2, scaled by ``scale`` (hierarchy /scale, latencies fixed)."""
+
+    n_cores: int = 8
+    scale: int = 4
+    l1_ways: int = 8
+    l2_ways: int = 8
+    llc_ways: int = 16
+    sb_entries: int = 8          # source buffer (fully associative)
+    lat_l1: int = 4
+    lat_l2: int = 10
+    lat_llc: int = 70
+    lat_mem: int = 300
+    lat_sb: int = 3
+    lat_merge: int = 170
+    lat_atomic_extra: int = 30
+
+    @property
+    def l1_sets(self) -> int:
+        return (32 * 1024 // 64 // self.l1_ways) // self.scale
+
+    @property
+    def l2_sets(self) -> int:
+        return (512 * 1024 // 64 // self.l2_ways) // self.scale
+
+    @property
+    def llc_sets(self) -> int:
+        return (4 * 1024 * 1024 // 64 // self.llc_ways) // self.scale
+
+    @property
+    def llc_lines(self) -> int:
+        return self.llc_sets * self.llc_ways
+
+    @property
+    def llc_bytes(self) -> int:
+        return self.llc_lines * 64
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    l1_tag: jax.Array    # [C, S1, W1] i32, -1 invalid
+    l1_lru: jax.Array
+    l2_tag: jax.Array    # [C, S2, W2]
+    l2_lru: jax.Array
+    llc_tag: jax.Array   # [SL, WL]
+    llc_lru: jax.Array
+    llc_sharers: jax.Array  # [SL, WL] u32 core bitmask
+    sb_tag: jax.Array    # [C, SB] i32
+    sb_dirty: jax.Array  # [C, SB] bool
+    sb_lru: jax.Array    # [C, SB] i32
+    cycles: jax.Array    # [C] i64
+    tick: jax.Array      # [] i32
+    # counters
+    l1_miss: jax.Array
+    llc_miss: jax.Array
+    invalidations: jax.Array
+    directory: jax.Array
+    evict_merges: jax.Array
+    silent_evicts: jax.Array
+    flush_merges: jax.Array
+    sb_hits: jax.Array
+    sb_misses: jax.Array
+
+
+def init_state(mc: MachineConfig) -> SimState:
+    C = mc.n_cores
+    i32 = jnp.int32
+    z = lambda: jnp.zeros((), i32)
+    return SimState(
+        l1_tag=jnp.full((C, mc.l1_sets, mc.l1_ways), -1, i32),
+        l1_lru=jnp.zeros((C, mc.l1_sets, mc.l1_ways), i32),
+        l2_tag=jnp.full((C, mc.l2_sets, mc.l2_ways), -1, i32),
+        l2_lru=jnp.zeros((C, mc.l2_sets, mc.l2_ways), i32),
+        llc_tag=jnp.full((mc.llc_sets, mc.llc_ways), -1, i32),
+        llc_lru=jnp.zeros((mc.llc_sets, mc.llc_ways), i32),
+        llc_sharers=jnp.zeros((mc.llc_sets, mc.llc_ways), jnp.uint32),
+        sb_tag=jnp.full((C, mc.sb_entries), -1, i32),
+        sb_dirty=jnp.zeros((C, mc.sb_entries), bool),
+        sb_lru=jnp.zeros((C, mc.sb_entries), i32),
+        cycles=jnp.zeros((C,), jnp.int32),
+        tick=z(),
+        l1_miss=z(), llc_miss=z(), invalidations=z(), directory=z(),
+        evict_merges=z(), silent_evicts=z(), flush_merges=z(),
+        sb_hits=z(), sb_misses=z())
+
+
+# --------------------------------------------------------------------------
+# cache helpers (single set row)
+# --------------------------------------------------------------------------
+
+
+def _probe(tags_row, line):
+    hits = tags_row == line
+    return jnp.any(hits), jnp.argmax(hits)
+
+
+def _victim(tags_row, lru_row):
+    free = tags_row < 0
+    return jnp.where(jnp.any(free), jnp.argmax(free), jnp.argmin(lru_row))
+
+
+def _touch_private(tag, lru, core, s, line, tick):
+    """Install/refresh ``line`` in a private cache level; returns hit."""
+    row_t = tag[core, s]
+    row_l = lru[core, s]
+    hit, way_h = _probe(row_t, line)
+    way = jnp.where(hit, way_h, _victim(row_t, row_l))
+    tag = tag.at[core, s, way].set(line)
+    lru = lru.at[core, s, way].set(tick)
+    return tag, lru, hit
+
+
+def _invalidate_others(tag, core, s, line, n_cores):
+    """Remove ``line`` from all other cores' caches at set ``s``.
+    Returns (tag, count_of_invalidated_copies)."""
+    rows = tag[:, s, :]                              # [C, W]
+    mask = (rows == line)
+    not_me = jnp.arange(n_cores)[:, None] != core
+    kill = mask & not_me
+    count = jnp.sum(kill.astype(jnp.int32))
+    rows = jnp.where(kill, -1, rows)
+    return tag.at[:, s, :].set(rows), count
+
+
+def _llc_access(state: SimState, mc: MachineConfig, line, core,
+                is_write):
+    """Probe/install at the LLC; returns (state, latency, was_miss)."""
+    s = line % mc.llc_sets
+    row_t = state.llc_tag[s]
+    hit, way_h = _probe(row_t, line)
+    way = jnp.where(hit, way_h, _victim(row_t, state.llc_lru[s]))
+    miss = ~hit
+    lat = jnp.where(hit, mc.lat_llc, mc.lat_mem)
+    bit = (jnp.uint32(1) << core.astype(jnp.uint32))
+    old_share = jnp.where(hit, state.llc_sharers[s, way], jnp.uint32(0))
+    sharers = old_share | bit
+    state = dataclasses.replace(
+        state,
+        llc_tag=state.llc_tag.at[s, way].set(line),
+        llc_lru=state.llc_lru.at[s, way].set(state.tick),
+        llc_sharers=state.llc_sharers.at[s, way].set(sharers),
+        llc_miss=state.llc_miss + miss.astype(jnp.int32))
+    return state, lat, miss
+
+
+# --------------------------------------------------------------------------
+# op handlers: each returns (state, latency)
+# --------------------------------------------------------------------------
+
+
+def _coherent(state: SimState, mc: MachineConfig, core, line, is_write,
+              extra_lat):
+    s1 = line % mc.l1_sets
+    s2 = line % mc.l2_sets
+    l1_t, l1_l, hit1 = _touch_private(state.l1_tag, state.l1_lru, core, s1,
+                                      line, state.tick)
+    l2_t, l2_l, hit2 = _touch_private(state.l2_tag, state.l2_lru, core, s2,
+                                      line, state.tick)
+    state = dataclasses.replace(state, l1_tag=l1_t, l1_lru=l1_l,
+                                l2_tag=l2_t, l2_lru=l2_l,
+                                l1_miss=state.l1_miss + (~hit1).astype(jnp.int32))
+
+    def miss_path(st: SimState):
+        st, lat_llc, _ = _llc_access(st, mc, line, core, is_write)
+        return st, mc.lat_l1 + mc.lat_l2 + lat_llc
+
+    def hit_path(st: SimState):
+        return st, jnp.where(hit1, mc.lat_l1, mc.lat_l1 + mc.lat_l2)
+
+    # A write always consults the directory (upgrade/RFO) even on a hit;
+    # a read goes to the LLC only on an L1+L2 miss.
+    need_llc = is_write | (~hit1 & ~hit2)
+    state, lat = lax.cond(need_llc, miss_path, hit_path, state)
+    state = dataclasses.replace(
+        state, directory=state.directory + need_llc.astype(jnp.int32))
+
+    def do_inval(st: SimState):
+        l1_t, n1 = _invalidate_others(st.l1_tag, core, s1, line, mc.n_cores)
+        l2_t, n2 = _invalidate_others(st.l2_tag, core, s2, line, mc.n_cores)
+        sl = line % mc.llc_sets
+        hit, way = _probe(st.llc_tag[sl], line)
+        bit = (jnp.uint32(1) << core.astype(jnp.uint32))
+        shr = jnp.where(hit, st.llc_sharers[sl, way], jnp.uint32(0))
+        others = shr & ~bit
+        n_dir = lax.population_count(others).astype(jnp.int32)
+        sharers = jnp.where(hit, bit, shr)
+        return dataclasses.replace(
+            st, l1_tag=l1_t, l2_tag=l2_t,
+            llc_sharers=st.llc_sharers.at[sl, way].set(sharers),
+            invalidations=st.invalidations + jnp.maximum(n1, n_dir))
+
+    state = lax.cond(is_write, do_inval, lambda st: st, state)
+    return state, lat + extra_lat
+
+
+def _h_read(state, mc, core, line):
+    return _coherent(state, mc, core, line, jnp.asarray(False), 0)
+
+
+def _h_write(state, mc, core, line):
+    return _coherent(state, mc, core, line, jnp.asarray(True), 0)
+
+
+def _h_atomic(state, mc, core, line):
+    return _coherent(state, mc, core, line, jnp.asarray(True),
+                     mc.lat_atomic_extra)
+
+
+def _h_cop(state: SimState, mc: MachineConfig, core, line, is_write):
+    """c_read / c_write: source-buffer privatization, no coherence."""
+    row_t = state.sb_tag[core]
+    hit, way_h = _probe(row_t, line)
+
+    def hit_path(st: SimState):
+        return st, jnp.asarray(mc.lat_l1, jnp.int32)
+
+    def miss_path(st: SimState):
+        way = _victim(row_t, st.sb_lru[core])
+        occupied = row_t[way] >= 0
+        dirty = st.sb_dirty[core, way]
+        ev_merge = occupied & dirty
+        ev_silent = occupied & ~dirty
+        # Evict-merge: 170 cycles incl. LLC round trip (paper Table 2).
+        lat_evict = jnp.where(ev_merge, mc.lat_merge, 0)
+        st = dataclasses.replace(
+            st,
+            evict_merges=st.evict_merges + ev_merge.astype(jnp.int32),
+            silent_evicts=st.silent_evicts + ev_silent.astype(jnp.int32))
+        # Fill from LLC/memory (no directory action, no coherence).
+        st, lat_fill, _ = _llc_access(st, mc, line, core,
+                                      jnp.asarray(False))
+        st = dataclasses.replace(
+            st,
+            sb_tag=st.sb_tag.at[core, way].set(line),
+            sb_dirty=st.sb_dirty.at[core, way].set(False),
+            sb_misses=st.sb_misses + 1)
+        return st, (mc.lat_sb + lat_fill + lat_evict).astype(jnp.int32)
+
+    state, lat = lax.cond(hit, hit_path, miss_path, state)
+    way = jnp.where(hit, way_h, _probe(state.sb_tag[core], line)[1])
+    state = dataclasses.replace(
+        state,
+        sb_lru=state.sb_lru.at[core, way].set(state.tick),
+        sb_dirty=state.sb_dirty.at[core, way].set(
+            state.sb_dirty[core, way] | is_write),
+        sb_hits=state.sb_hits + hit.astype(jnp.int32))
+    return state, lat
+
+
+def _h_merge(state: SimState, mc: MachineConfig, core, line):
+    """Explicit merge instruction: flush all dirty entries (dirty-merge
+    optimization skips clean ones)."""
+    dirty = state.sb_dirty[core] & (state.sb_tag[core] >= 0)
+    clean = (~state.sb_dirty[core]) & (state.sb_tag[core] >= 0)
+    n_dirty = jnp.sum(dirty.astype(jnp.int32))
+    n_clean = jnp.sum(clean.astype(jnp.int32))
+    state = dataclasses.replace(
+        state,
+        sb_tag=state.sb_tag.at[core].set(-1),
+        sb_dirty=state.sb_dirty.at[core].set(False),
+        flush_merges=state.flush_merges + n_dirty,
+        silent_evicts=state.silent_evicts + n_clean)
+    return state, n_dirty * mc.lat_merge
+
+
+def _h_barrier(state: SimState, mc: MachineConfig, core, line):
+    m = jnp.max(state.cycles)
+    state = dataclasses.replace(
+        state, cycles=state.cycles.at[core].set(m))
+    return state, jnp.asarray(0, jnp.int32)
+
+
+def _h_nop(state, mc, core, line):
+    return state, jnp.asarray(0, jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# the scan
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("mc",))
+def simulate(mc: MachineConfig, core, op, line, extra):
+    """core/op/line/extra: equal-length i32 arrays (the interleaved trace)."""
+
+    handlers = [
+        lambda st, c, l: _h_read(st, mc, c, l),
+        lambda st, c, l: _h_write(st, mc, c, l),
+        lambda st, c, l: _h_cop(st, mc, c, l, jnp.asarray(False)),
+        lambda st, c, l: _h_cop(st, mc, c, l, jnp.asarray(True)),
+        lambda st, c, l: _h_atomic(st, mc, c, l),
+        lambda st, c, l: _h_merge(st, mc, c, l),
+        lambda st, c, l: _h_barrier(st, mc, c, l),
+        lambda st, c, l: _h_nop(st, mc, c, l),
+    ]
+
+    def step(state: SimState, acc):
+        c, o, l, e = acc
+        state, lat = lax.switch(o, handlers, state, c, l)
+        cost = jnp.where((o == NOP) | (o == BARRIER), 0,
+                         (lat + e + 1).astype(jnp.int32))  # +1 instr cycle
+        state = dataclasses.replace(
+            state,
+            cycles=state.cycles.at[c].add(cost),
+            tick=state.tick + 1)
+        return state, None
+
+    state = init_state(mc)
+    state, _ = lax.scan(step, state,
+                        (core.astype(jnp.int32), op.astype(jnp.int32),
+                         line.astype(jnp.int32), extra.astype(jnp.int32)))
+    return state
+
+
+def run_trace(mc: MachineConfig, trace: dict) -> dict:
+    """trace: dict with core/op/line/extra numpy arrays -> result dict."""
+    n = len(trace["op"])
+    padded = max(4096, 1 << (n - 1).bit_length())  # pow2: bounded recompiles
+    pad = padded - n
+    arrs = {}
+    for k in ("core", "op", "line", "extra"):
+        a = np.asarray(trace[k], np.int32)
+        if pad:
+            fill = NOP if k == "op" else 0
+            a = np.concatenate([a, np.full((pad,), fill, np.int32)])
+        arrs[k] = jnp.asarray(a)
+    st = simulate(mc, arrs["core"], arrs["op"], arrs["line"], arrs["extra"])
+    cycles = np.asarray(st.cycles)
+    return {
+        "cycles_max": int(cycles.max()),
+        "cycles_per_core": cycles.tolist(),
+        "l1_miss": int(st.l1_miss),
+        "llc_miss": int(st.llc_miss),
+        "invalidations": int(st.invalidations),
+        "directory": int(st.directory),
+        "evict_merges": int(st.evict_merges),
+        "silent_evicts": int(st.silent_evicts),
+        "flush_merges": int(st.flush_merges),
+        "sb_hits": int(st.sb_hits),
+        "sb_misses": int(st.sb_misses),
+        "accesses": n,
+    }

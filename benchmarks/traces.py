@@ -1,0 +1,307 @@
+"""Trace generators: the paper's four applications x four versions.
+
+Each builder returns (trace dict, meta dict). Versions:
+
+  fgl    fine-grained locking: lock acquire (ATOMIC) + data R/W + unlock
+  dup    static duplication: R/W on a per-core private copy + merge phase
+  ccache on-demand privatization: CREAD/CWRITE + merge boundaries
+  atomic (BFS only) lock-free CAS directly on the data
+
+Working-set sizes are expressed as a fraction of the (scaled) LLC, matching
+the paper's 25%-400% sweep. Addresses are 64B line ids; region layout:
+
+  [0, data_lines)                         shared data structure
+  [lock_base, lock_base + lock_lines)     FGL locks
+  [dup_base + c*data_lines, ...)          per-core private copies (DUP)
+
+The interleave is round-robin across cores (the paper's PIN-style model).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.simulator import (ATOMIC, BARRIER, CREAD, CWRITE, MERGE,
+                                  NOP, READ, WRITE, MachineConfig)
+
+VPL = 8          # 8-byte values per 64-byte line
+RPL = 16         # 4-byte ranks/locks per line
+
+
+def _interleave(per_core: list[dict]) -> dict:
+    """Round-robin interleave per-core access streams (ragged-safe)."""
+    C = len(per_core)
+    lens = [len(p["op"]) for p in per_core]
+    n_max = max(lens)
+    core, op, line, extra = [], [], [], []
+    for i in range(n_max):
+        for c in range(C):
+            if i < lens[c]:
+                core.append(c)
+                op.append(per_core[c]["op"][i])
+                line.append(per_core[c]["line"][i])
+                extra.append(per_core[c]["extra"][i])
+    return {"core": np.asarray(core, np.int32),
+            "op": np.asarray(op, np.int32),
+            "line": np.asarray(line, np.int32),
+            "extra": np.asarray(extra, np.int32)}
+
+
+def _stream(ops, lines, extras=None):
+    n = len(ops)
+    return {"op": list(ops), "line": list(lines),
+            "extra": list(extras) if extras is not None else [0] * n}
+
+
+def _empty():
+    return {"op": [], "line": [], "extra": []}
+
+
+def _emit(s, op, line, extra=0):
+    s["op"].append(op)
+    s["line"].append(line)
+    s["extra"].append(extra)
+
+
+# ---------------------------------------------------------------------------
+# Key-value store: random-key increments (paper Section 5.1).
+# ---------------------------------------------------------------------------
+
+
+def kv_store(mc: MachineConfig, version: str, llc_frac: float,
+             accesses_per_key: int = 4, seed: int = 0,
+             max_updates: int = 300_000):
+    rng = np.random.default_rng(seed)
+    C = mc.n_cores
+    data_lines = max(64, int(mc.llc_lines * llc_frac))
+    keys = data_lines * VPL
+    n_updates = min(keys * accesses_per_key, max_updates)
+    per_core_updates = n_updates // C
+
+    lock_base = 16 * mc.llc_lines            # one padded lock line per key
+    dup_base = lock_base + keys
+
+    streams = []
+    for c in range(C):
+        ks = rng.integers(0, keys, per_core_updates)
+        s = _empty()
+        for k in ks:
+            dl = int(k) // VPL
+            if version == "fgl":
+                _emit(s, ATOMIC, lock_base + int(k))       # acquire
+                _emit(s, READ, dl)
+                _emit(s, WRITE, dl, 2)
+                _emit(s, WRITE, lock_base + int(k))        # release
+            elif version == "dup":
+                _emit(s, READ, dup_base + c * data_lines + dl)
+                _emit(s, WRITE, dup_base + c * data_lines + dl, 2)
+            elif version == "ccache":
+                _emit(s, CREAD, dl)
+                _emit(s, CWRITE, dl, 2)
+            else:
+                raise ValueError(version)
+        if version == "ccache":
+            _emit(s, MERGE, 0)
+            _emit(s, BARRIER, 0)
+        if version == "dup":
+            # merge phase: each core reduces its partition of the table
+            _emit(s, BARRIER, 0)
+            lo = c * data_lines // C
+            hi = (c + 1) * data_lines // C
+            for dl in range(lo, hi):
+                for cc in range(C):
+                    _emit(s, READ, dup_base + cc * data_lines + dl)
+                _emit(s, WRITE, dl, 2)
+        streams.append(s)
+    meta = {"keys": keys, "data_lines": data_lines, "updates": n_updates,
+            "footprint_lines": {"fgl": data_lines + keys,
+                                "dup": data_lines * (1 + C),
+                                "ccache": data_lines}[version]}
+    return _interleave(streams), meta
+
+
+# ---------------------------------------------------------------------------
+# K-means: per-point nearest-center update (paper Section 5.1).
+# ---------------------------------------------------------------------------
+
+
+def kmeans(mc: MachineConfig, version: str, llc_frac: float, k: int = 8,
+           iters: int = 2, seed: int = 0, max_points: int = 40_000):
+    rng = np.random.default_rng(seed)
+    C = mc.n_cores
+    point_lines = max(64, int(mc.llc_lines * llc_frac))  # 1 line per point
+    n_points = min(point_lines, max_points)
+    centers_base = 8 * mc.llc_lines       # k center lines (accumulators)
+    lock_base = centers_base + k
+    dup_base = lock_base + k
+
+    streams = [_empty() for _ in range(C)]
+    for it in range(iters):
+        for c in range(C):
+            s = streams[c]
+            pts = range(c, n_points, C)
+            assign = rng.integers(0, k, len(list(range(c, n_points, C))))
+            for p, a in zip(pts, assign):
+                _emit(s, READ, p % point_lines, 8 * k)  # distance compute
+                cl = int(a)
+                if version == "fgl":
+                    _emit(s, ATOMIC, lock_base + cl)
+                    _emit(s, READ, centers_base + cl)
+                    _emit(s, WRITE, centers_base + cl, 4)
+                    _emit(s, WRITE, lock_base + cl)
+                elif version == "dup":
+                    _emit(s, READ, dup_base + c * k + cl)
+                    _emit(s, WRITE, dup_base + c * k + cl, 4)
+                elif version == "ccache":
+                    _emit(s, CREAD, centers_base + cl)
+                    _emit(s, CWRITE, centers_base + cl, 4)
+                elif version == "ccache_eager":
+                    # no merge-on-evict: explicit merge after every point
+                    _emit(s, CREAD, centers_base + cl)
+                    _emit(s, CWRITE, centers_base + cl, 4)
+                    _emit(s, MERGE, 0)
+        # merge boundary: recompute centers
+        for c in range(C):
+            s = streams[c]
+            if version in ("ccache", "ccache_eager"):
+                _emit(s, MERGE, 0)
+            if version == "dup":
+                # core 0 reduces all copies (paper: one thread iterates)
+                if c == 0:
+                    for cl in range(k):
+                        for cc in range(C):
+                            _emit(s, READ, dup_base + cc * k + cl)
+                        _emit(s, WRITE, centers_base + cl, 4)
+            _emit(s, BARRIER, 0)
+    meta = {"points": n_points, "k": k, "iters": iters,
+            "footprint_lines": {"fgl": point_lines + 2 * k,
+                                "dup": point_lines + k * (1 + C),
+                                "ccache": point_lines + k,
+                                "ccache_eager": point_lines + k}[version]}
+    return _interleave(streams), meta
+
+
+# ---------------------------------------------------------------------------
+# PageRank: push-style rank propagation on an RMAT-ish graph.
+# ---------------------------------------------------------------------------
+
+
+def _rmat_edges(n: int, m: int, rng) -> np.ndarray:
+    """Powerlaw-ish edges via preferential indexing (cheap RMAT proxy)."""
+    u = (rng.pareto(1.5, m).clip(0, 9.99) / 10 * n).astype(np.int64)
+    v = (rng.pareto(1.5, m).clip(0, 9.99) / 10 * n).astype(np.int64)
+    return np.stack([u % n, v % n], 1)
+
+
+def pagerank(mc: MachineConfig, version: str, llc_frac: float,
+             iters: int = 2, seed: int = 0, max_edges: int = 150_000):
+    rng = np.random.default_rng(seed)
+    C = mc.n_cores
+    rank_lines = max(64, int(mc.llc_lines * llc_frac))
+    n_nodes = rank_lines * RPL
+    m_edges = min(4 * n_nodes, max_edges)
+    edges = _rmat_edges(n_nodes, m_edges, rng)
+    lock_base = 8 * mc.llc_lines
+    next_base = lock_base + rank_lines     # DUP double buffer
+
+    streams = [_empty() for _ in range(C)]
+    for it in range(iters):
+        for c in range(C):
+            s = streams[c]
+            if version == "dup":
+                mine = edges[edges[:, 1] % C == c]   # dst-partitioned
+            else:
+                mine = edges[edges[:, 0] % C == c]   # src-partitioned
+            for u, v in mine:
+                ul, vl = int(u) // RPL, int(v) // RPL
+                if version == "fgl":
+                    _emit(s, READ, ul, 2)
+                    _emit(s, ATOMIC, lock_base + vl)  # packed locks
+                    _emit(s, READ, vl)
+                    _emit(s, WRITE, vl, 2)
+                    _emit(s, WRITE, lock_base + vl)
+                elif version == "dup":
+                    _emit(s, READ, ul, 2)              # prev buffer
+                    _emit(s, READ, next_base + vl)
+                    _emit(s, WRITE, next_base + vl, 2)
+                elif version == "ccache":
+                    _emit(s, CREAD, ul, 2)   # clean privatization (read-only)
+                    _emit(s, CREAD, vl)
+                    _emit(s, CWRITE, vl, 2)
+            if version == "ccache":
+                _emit(s, MERGE, 0)
+            _emit(s, BARRIER, 0)
+    meta = {"nodes": n_nodes, "edges": m_edges,
+            "footprint_lines": {"fgl": rank_lines * 2,   # ranks + locks
+                                "dup": rank_lines * 2,   # double buffer
+                                "ccache": rank_lines}[version]}
+    return _interleave(streams), meta
+
+
+# ---------------------------------------------------------------------------
+# BFS: frontier expansion setting bits in a visited bitmap (GAP BC kernel).
+# ---------------------------------------------------------------------------
+
+
+def bfs(mc: MachineConfig, version: str, llc_frac: float, seed: int = 0,
+        max_edges: int = 150_000):
+    rng = np.random.default_rng(seed)
+    C = mc.n_cores
+    bitmap_lines = max(64, int(mc.llc_lines * llc_frac))
+    n_nodes = bitmap_lines * 512            # 1 bit per node
+    m_edges = min(8 * (n_nodes // 64), max_edges)
+    # frontier targets: powerlaw destinations (kron-like, heavily skewed)
+    dst = ((rng.pareto(1.05, m_edges).clip(0, 19.99) / 20 * n_nodes)
+           .astype(np.int64) % n_nodes)
+    lock_base = 8 * mc.llc_lines
+    dup_base = lock_base + n_nodes // 32 // RPL + 8
+
+    streams = [_empty() for _ in range(C)]
+    per_core = np.array_split(dst, C)
+    for c in range(C):
+        s = streams[c]
+        buf_ptr = 0
+        for v in per_core[c]:
+            vl = int(v) // 512                     # bitmap line
+            wl = int(v) // 32                      # bitmap word index
+            if version == "fgl":
+                _emit(s, ATOMIC, lock_base + wl // RPL)
+                _emit(s, READ, vl)
+                _emit(s, WRITE, vl, 1)
+                _emit(s, WRITE, lock_base + wl // RPL)
+            elif version == "atomic":
+                _emit(s, ATOMIC, vl, 1)            # CAS on the word's line
+            elif version == "dup":
+                # append to thread-local container (sequential lines)
+                _emit(s, WRITE, dup_base + c * (m_edges // C // VPL + 2)
+                      + buf_ptr // VPL, 1)
+                buf_ptr += 1
+            elif version == "ccache":
+                # blind bit-set: OR-merge needs no read (paper: "simply
+                # marked the bitmap as CData and used COps to set bits")
+                _emit(s, CWRITE, vl, 1)
+        if version == "dup":
+            # merge: apply container updates atomically to the bitmap
+            _emit(s, BARRIER, 0)
+            for i, v in enumerate(per_core[c]):
+                base = dup_base + c * (m_edges // C // VPL + 2)
+                _emit(s, READ, base + i // VPL)
+                _emit(s, ATOMIC, int(v) // 512, 1)
+        if version == "ccache":
+            _emit(s, MERGE, 0)
+            _emit(s, BARRIER, 0)
+    meta = {"nodes": n_nodes, "edges": m_edges,
+            "footprint_lines": {
+                "fgl": bitmap_lines + n_nodes // 32 // RPL,
+                "atomic": bitmap_lines,
+                "dup": bitmap_lines + m_edges // VPL,
+                "ccache": bitmap_lines}[version]}
+    return _interleave(streams), meta
+
+
+APPS = {
+    "kv_store": (kv_store, ("fgl", "dup", "ccache")),
+    "kmeans": (kmeans, ("fgl", "dup", "ccache")),
+    "pagerank": (pagerank, ("fgl", "dup", "ccache")),
+    "bfs": (bfs, ("fgl", "atomic", "dup", "ccache")),
+}

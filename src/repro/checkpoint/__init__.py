@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpoint import (
+    latest_step,
+    restore,
+    restore_resharded,
+    save,
+)

@@ -1,0 +1,129 @@
+"""Fault-tolerant sharded checkpointing with atomic two-phase commit.
+
+Layout:
+
+    ckpt_dir/
+      step_000100.tmp/        (phase 1: written here)
+      step_000100/             (phase 2: atomic rename)
+        manifest.json          tree structure, shapes, dtypes, mesh, extras
+        arrays.npz             leaf data, keyed by flattened tree path
+      LATEST                   text file, written last (commit point)
+
+A partially-written checkpoint is never visible: ``LATEST`` only ever names
+a fully-renamed directory. ``restore_resharded`` restores onto *any* mesh
+(elastic scaling): leaves are global arrays; ``jax.device_put`` with the
+target sharding re-distributes them, so restoring 512-chip state onto 256
+chips (or 1 CPU) is the same code path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree,
+         extras: Optional[dict] = None) -> str:
+    """Two-phase-commit save. Returns the final checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, name + ".tmp")
+    final = os.path.join(ckpt_dir, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "keys": [], "extras": extras or {}}
+    for key, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        true_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or true_dtype in (
+                "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # npz cannot round-trip ml_dtypes: store raw bits + true dtype.
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2
+                           else np.uint8)
+        arrays[key] = arr
+        manifest["keys"].append(
+            {"key": key, "shape": list(arr.shape), "dtype": true_dtype})
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic on one filesystem
+    latest = os.path.join(ckpt_dir, "LATEST")
+    with open(latest + ".tmp", "w") as f:
+        f.write(name)
+    os.replace(latest + ".tmp", latest)        # commit point
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    latest = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like: PyTree, step: Optional[int] = None
+            ) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like``; returns (tree, extras)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    keys = [k for k, _ in _flatten_with_paths(like)]
+    missing = [k for k in keys if k not in data]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    dtypes = {e["key"]: e["dtype"] for e in manifest["keys"]}
+    import ml_dtypes
+    leaves = []
+    for k in keys:
+        arr = data[k]
+        want = dtypes.get(k, str(arr.dtype))
+        if want != str(arr.dtype):
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want)))
+        leaves.append(arr)
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves), manifest["extras"]
+
+
+def restore_resharded(ckpt_dir: str, like: PyTree, shardings: PyTree,
+                      step: Optional[int] = None) -> tuple[PyTree, dict]:
+    """Elastic restore: place each leaf with its target sharding (any mesh)."""
+    tree, extras = restore(ckpt_dir, like, step)
+    flat_t, treedef = jax.tree.flatten(tree)
+    flat_s = treedef.flatten_up_to(shardings)
+    placed = [jax.device_put(t, s) for t, s in zip(flat_t, flat_s)]
+    return jax.tree.unflatten(treedef, placed), extras

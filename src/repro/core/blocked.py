@@ -1,0 +1,180 @@
+"""Blocked on-demand privatization: the source buffer + ways + evict-merge.
+
+This is the faithful, instrumented model of the paper's hardware structure,
+used by the paper-benchmark suite (KV store / K-means / PageRank / BFS) and by
+tests as the oracle for the ``cscatter`` Pallas kernel's policy. A device
+privatizes at most ``ways`` *blocks* of a large table at a time (the w-way L1
+set / w-entry source buffer); touching a new block with all ways full forces
+an **evict-merge** of the LRU way (paper §4.3), and ``flush`` is the explicit
+merge instruction. Clean ways are silently dropped (the dirty-merge
+optimization) — both events are counted, which reproduces Fig. 9.
+
+Granularity note (DESIGN.md §2): the privatization unit is a table *block* of
+``block_rows`` rows, the TPU-efficient analog of a 64 B cache line.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.merge_functions import MergeFn
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BlockedCache:
+    """Per-device privatization state for one CData table."""
+
+    block_ids: Array   # i32[ways], -1 = invalid
+    src_vals: Array    # [ways, block_rows, cols]  source-buffer copies
+    upd_vals: Array    # [ways, block_rows, cols]  update copies (the "L1")
+    dirty: Array       # bool[ways]
+    clock: Array       # i32[ways]  LRU timestamps
+    tick: Array        # i32[]
+    n_evict_merges: Array   # i32[]  dirty evictions (merge-on-evict events)
+    n_silent_evicts: Array  # i32[]  clean evictions (dirty-merge skips)
+    n_flush_merges: Array   # i32[]  explicit merge-instruction merges
+
+
+def init_cache(ways: int, block_rows: int, cols: int, dtype) -> BlockedCache:
+    zeros = jnp.zeros((ways, block_rows, cols), dtype)
+    return BlockedCache(
+        block_ids=jnp.full((ways,), -1, jnp.int32),
+        src_vals=zeros,
+        upd_vals=zeros,
+        dirty=jnp.zeros((ways,), bool),
+        clock=jnp.zeros((ways,), jnp.int32),
+        tick=jnp.zeros((), jnp.int32),
+        n_evict_merges=jnp.zeros((), jnp.int32),
+        n_silent_evicts=jnp.zeros((), jnp.int32),
+        n_flush_merges=jnp.zeros((), jnp.int32),
+    )
+
+
+def _merge_way_into(table: Array, cache: BlockedCache, way, merge: MergeFn):
+    """table[block] = apply(table[block], delta(src, upd)) for one way."""
+    block_rows = cache.upd_vals.shape[1]
+    start = cache.block_ids[way] * block_rows
+    mem = lax.dynamic_slice_in_dim(table, start, block_rows, axis=0)
+    u = merge.delta(cache.src_vals[way], cache.upd_vals[way])
+    mem = merge.apply(mem, u)
+    return lax.dynamic_update_slice_in_dim(table, mem, start, axis=0)
+
+
+def cop_scatter(cache: BlockedCache, table: Array, rows: Array, vals: Array,
+                merge: MergeFn) -> tuple[BlockedCache, Array]:
+    """Apply a stream of COps ``table[rows[i]] ⊕= vals[i]`` through the cache.
+
+    Faithful access-by-access model (lax.scan) so hit/miss/eviction behavior —
+    and therefore the Fig. 9 counters — are exact. ``vals``: [n, cols].
+    """
+    ways, block_rows, cols = cache.upd_vals.shape
+
+    def step(carry, rv):
+        cache, table = carry
+        row, val = rv
+        block = row // block_rows
+        line = row % block_rows
+
+        hits = cache.block_ids == block
+        hit = jnp.any(hits)
+        way_hit = jnp.argmax(hits)
+        free = cache.block_ids < 0
+        any_free = jnp.any(free)
+        way_free = jnp.argmax(free)
+        way_lru = jnp.argmin(jnp.where(cache.block_ids < 0, jnp.iinfo(jnp.int32).max,
+                                       cache.clock))
+        victim = jnp.where(hit, way_hit, jnp.where(any_free, way_free, way_lru))
+
+        # Eviction path: occupied victim on a miss.
+        must_evict = (~hit) & (~any_free)
+        evict_dirty = must_evict & cache.dirty[victim]
+        table = lax.cond(
+            evict_dirty,
+            lambda t: _merge_way_into(t, cache, victim, merge),
+            lambda t: t,
+            table)
+        n_evict = cache.n_evict_merges + evict_dirty.astype(jnp.int32)
+        n_silent = cache.n_silent_evicts + (must_evict & ~cache.dirty[victim]).astype(jnp.int32)
+
+        # (Re)fill on miss: privatize the block — src and upd copies.
+        start = block * block_rows
+        fresh = lax.dynamic_slice_in_dim(table, start, block_rows, axis=0)
+        src_vals = lax.cond(
+            hit, lambda s: s,
+            lambda s: s.at[victim].set(fresh), cache.src_vals)
+        upd_vals = lax.cond(
+            hit, lambda u: u,
+            lambda u: u.at[victim].set(fresh), cache.upd_vals)
+        block_ids = cache.block_ids.at[victim].set(block)
+        dirty = lax.cond(hit, lambda d: d,
+                         lambda d: d.at[victim].set(False), cache.dirty)
+
+        # The COp itself: update copy ⊕= val (no coherence, no lock).
+        upd_vals = upd_vals.at[victim, line].set(merge.combine(upd_vals[victim, line], val))
+        dirty = dirty.at[victim].set(True)
+        clock = cache.clock.at[victim].set(cache.tick)
+
+        new_cache = BlockedCache(
+            block_ids=block_ids, src_vals=src_vals, upd_vals=upd_vals,
+            dirty=dirty, clock=clock, tick=cache.tick + 1,
+            n_evict_merges=n_evict, n_silent_evicts=n_silent,
+            n_flush_merges=cache.n_flush_merges)
+        return (new_cache, table), None
+
+    vals = vals.reshape(rows.shape[0], cols)
+    (cache, table), _ = lax.scan(step, (cache, table), (rows.astype(jnp.int32), vals))
+    return cache, table
+
+
+def c_read_row(cache: BlockedCache, table: Array, row: Array) -> Array:
+    """Read a row through the cache (update copy if resident, else memory)."""
+    block_rows = cache.upd_vals.shape[1]
+    block, line = row // block_rows, row % block_rows
+    hits = cache.block_ids == block
+    hit = jnp.any(hits)
+    way = jnp.argmax(hits)
+    return jnp.where(hit, cache.upd_vals[way, line], table[row])
+
+
+def flush(cache: BlockedCache, table: Array, merge: MergeFn) -> tuple[BlockedCache, Array]:
+    """The explicit ``merge`` instruction: merge all valid dirty ways.
+
+    Clean ways are invalidated without a merge (dirty-merge optimization).
+    """
+    ways = cache.upd_vals.shape[0]
+    n_flush = cache.n_flush_merges
+    n_silent = cache.n_silent_evicts
+    for way in range(ways):  # static, small (the paper's 8-entry buffer)
+        valid = cache.block_ids[way] >= 0
+        do_merge = valid & cache.dirty[way]
+        table = lax.cond(
+            do_merge,
+            lambda t, w=way: _merge_way_into(t, cache, w, merge),
+            lambda t: t,
+            table)
+        n_flush = n_flush + do_merge.astype(jnp.int32)
+        n_silent = n_silent + (valid & ~cache.dirty[way]).astype(jnp.int32)
+    cache = dataclasses.replace(
+        cache,
+        block_ids=jnp.full((ways,), -1, jnp.int32),
+        dirty=jnp.zeros((ways,), bool),
+        n_flush_merges=n_flush,
+        n_silent_evicts=n_silent)
+    return cache, table
+
+
+def stats(cache: BlockedCache) -> dict[str, Any]:
+    return {
+        "evict_merges": int(cache.n_evict_merges),
+        "silent_evicts": int(cache.n_silent_evicts),
+        "flush_merges": int(cache.n_flush_merges),
+        "total_merges": int(cache.n_evict_merges + cache.n_flush_merges),
+    }

@@ -1,0 +1,191 @@
+"""The CCache execution engine: on-demand privatization + flexible merge.
+
+Maps the paper's mechanism onto a TPU mesh (DESIGN.md §2):
+
+* ``privatize``    — c_read's first-touch duplication: produces a ``CView``
+  holding the preserved *source copy* and the mutable *update copy*. Inside
+  ``shard_map`` each device's view is its private replica; the functional IR
+  plays the role of the source buffer (the src operand simply stays live).
+* ``c_read`` / ``c_write`` / ``c_update`` — COps on the update copy. No
+  collectives are emitted between privatize and merge: the compiled program
+  provably has zero "coherence traffic" for CData in that window.
+* ``merge``        — cross-device reconciliation. Fixed-op merges take the
+  XLA fused collective (the COUP fast path); arbitrary software merges run a
+  recursive-doubling ``ppermute`` butterfly whose combine step is the user's
+  JAX function — this is what COUP cannot express and CCache can.
+* ``soft_merge``   — defers reconciliation: the local delta is coalesced into
+  a pending-update accumulator (``combine``), and the expensive cross-device
+  merge happens once, later (merge-on-evict at the program level).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.merge_functions import MergeFn, ADD
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CView:
+    """A privatized view of CData: preserved source + mutable update copy."""
+
+    src: PyTree
+    upd: PyTree
+
+
+def privatize(mem: PyTree) -> CView:
+    """First-touch duplication (the c_read miss path)."""
+    return CView(src=mem, upd=mem)
+
+
+def c_read(view: CView) -> PyTree:
+    return view.upd
+
+
+def c_write(view: CView, value: PyTree) -> CView:
+    return CView(src=view.src, upd=value)
+
+
+def c_update(view: CView, fn) -> CView:
+    return CView(src=view.src, upd=fn(view.upd))
+
+
+# ---------------------------------------------------------------------------
+# Flexible tree merge: all-reduce with an arbitrary commutative combine.
+# ---------------------------------------------------------------------------
+
+
+def _butterfly_perms(size: int, step: int):
+    return [(i, i ^ step) for i in range(size)]
+
+
+def tree_merge(update: PyTree, axis_name, merge: MergeFn,
+               compress: bool = False) -> PyTree:
+    """Recursive-doubling all-reduce of ``update`` over ``axis_name``.
+
+    log2(P) ``ppermute`` rounds; every rank ends with the full combination.
+    Requires a power-of-two axis (TPU meshes are); otherwise falls back to
+    all_gather + local fold. With ``compress`` and a merge that defines
+    encode/decode, each round exchanges the compressed wire format.
+    """
+    size = lax.axis_size(axis_name)
+    if size & (size - 1) != 0:  # non-power-of-two fallback
+        gathered = lax.all_gather(update, axis_name, axis=0, tiled=False)
+        def _fold(x):
+            acc = x[0]
+            for i in range(1, size):
+                acc = merge.combine(acc, x[i])
+            return acc
+        return jax.tree.map(_fold, gathered)
+
+    if compress and merge.encode is not None:
+        leaves, treedef = jax.tree.flatten(update)
+        step = 1
+        while step < size:
+            perm = _butterfly_perms(size, step)
+            wire = [merge.encode(l) for l in leaves]
+            other = lax.ppermute(wire, axis_name, perm=perm)
+            # Decode our own wire too so both ranks fold identically-quantized
+            # values — keeps the butterfly commutative up to codec noise.
+            leaves = [merge.combine(merge.decode(w), merge.decode(o))
+                      for w, o in zip(wire, other)]
+            step <<= 1
+        return jax.tree.unflatten(treedef, leaves)
+
+    u = update
+    step = 1
+    while step < size:
+        perm = _butterfly_perms(size, step)
+        other = lax.ppermute(u, axis_name, perm=perm)
+        u = merge.tree_combine(u, other)
+        step <<= 1
+    return u
+
+
+_XLA_REDUCERS = {
+    "add": lax.psum,
+    "max": lax.pmax,
+    "min": lax.pmin,
+}
+
+
+def reduce_update(update: PyTree, axis_name, merge: MergeFn,
+                  compress: bool = False, force_tree: bool = False) -> PyTree:
+    """Cross-device combination of per-device updates.
+
+    COUP fast path (fixed op fused into the collective) when available and not
+    overridden; CCache flexible path (tree_merge) otherwise.
+    """
+    if compress and merge.encode is not None:
+        return tree_merge(update, axis_name, merge, compress=True)
+    if not force_tree and merge.xla_reduce in _XLA_REDUCERS:
+        return jax.tree.map(
+            functools.partial(_XLA_REDUCERS[merge.xla_reduce], axis_name=axis_name),
+            update)
+    if not force_tree and merge.xla_reduce in ("or", "and"):
+        # XLA lowers integer min/max/sum but not or/and directly through the
+        # jax API; or/and over uint can be expressed via max/min for bitmaps
+        # only in the 1-bit case, so take the tree path for full generality.
+        return tree_merge(update, axis_name, merge)
+    return tree_merge(update, axis_name, merge)
+
+
+def merge(view: CView, mem: PyTree, axis_name, merge_fn: MergeFn,
+          key: Optional[jax.Array] = None, compress: bool = False,
+          force_tree: bool = False) -> PyTree:
+    """Full CCache merge: delta -> cross-device combine -> apply to memory.
+
+    Every rank computes the identical combined update, so applying it to the
+    (replicated) memory copy leaves memory consistent — the paper's "when all
+    cores have merged, the in-memory copy is up to date", with per-line
+    atomicity by construction (no locks; see DESIGN.md §2).
+    """
+    u = merge_fn.tree_delta(view.src, view.upd)
+    u = reduce_update(u, axis_name, merge_fn, compress=compress,
+                      force_tree=force_tree)
+    return merge_fn.tree_apply(mem, u, key=key)
+
+
+# ---------------------------------------------------------------------------
+# soft_merge: deferred, locally-coalesced merging (merge-on-evict analog).
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PendingUpdate:
+    """Locally coalesced updates awaiting a cross-device merge."""
+
+    update: PyTree
+
+
+def soft_merge(view: CView, pending: Optional[PendingUpdate],
+               merge_fn: MergeFn) -> tuple[CView, PendingUpdate]:
+    """Coalesce the view's delta into ``pending``; reset the view's source.
+
+    The cross-device merge is postponed (cf. the mergeable bit): call
+    ``commit`` at the merge boundary. Between soft_merges the core keeps
+    locality on its private copy.
+    """
+    u = merge_fn.tree_delta(view.src, view.upd)
+    if pending is None:
+        pending = PendingUpdate(update=u)
+    else:
+        pending = PendingUpdate(update=merge_fn.tree_combine(pending.update, u))
+    return CView(src=view.upd, upd=view.upd), pending
+
+
+def commit(pending: PendingUpdate, mem: PyTree, axis_name, merge_fn: MergeFn,
+           key: Optional[jax.Array] = None, compress: bool = False) -> PyTree:
+    """Apply a deferred pending update to memory (the eviction-time merge)."""
+    u = reduce_update(pending.update, axis_name, merge_fn, compress=compress)
+    return merge_fn.tree_apply(mem, u, key=key)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+cscatter - CCache flagship: commutative scatter with VMEM privatization.
+cmerge - the merge instruction over a W-way source buffer (scalar prefetch).
+flash_attention / decode_attention - blockwise online-softmax attention.
+"""
+
+from repro.kernels.ops import (
+    commutative_scatter,
+    decode_attention,
+    embedding_grad_scatter,
+    flash_attention,
+    merge_buffer,
+)

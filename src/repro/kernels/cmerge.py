@@ -1,0 +1,91 @@
+"""cmerge: the merge instruction as a tiled Pallas kernel.
+
+Executes the paper's Table-1 ``merge`` over a *source buffer* of W ways: for
+each valid dirty way w holding table block ``block_ids[w]`` with preserved
+source copy ``src[w]`` and update copy ``upd[w]``:
+
+    table[block]  =  apply(table[block], delta(src[w], upd[w]))
+
+The scalar-prefetched ``block_ids`` drive the BlockSpec index maps — the
+grid gathers each way's *memory copy* block directly (the TPU analogue of
+locking and fetching the LLC line), merges in VMEM (the merge registers), and
+scatters it back via the aliased output. Clean/invalid ways (dirty=0) write
+memory back unchanged into a parking block appended by the ops wrapper —
+the dirty-merge optimization. Requires unique block_ids among dirty ways
+(the source buffer invariant: a block occupies at most one way).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MERGE_KINDS = ("add", "sat_add", "max", "or")
+
+
+def _kernel(ids_ref, dirty_ref, table_ref, src_ref, upd_ref, out_ref, *,
+            kind: str, sat_min: float, sat_max: float):
+    w = pl.program_id(0)
+    mem = table_ref[...]                              # memory merge register
+    src = src_ref[0]                                  # source merge register
+    upd = upd_ref[0]                                  # updated merge register
+    is_dirty = dirty_ref[w] != 0
+
+    if kind == "add":
+        new = mem + (upd - src)
+    elif kind == "sat_add":
+        s = mem.astype(jnp.float32) + (upd.astype(jnp.float32)
+                                       - src.astype(jnp.float32))
+        new = jnp.clip(s, sat_min, sat_max).astype(mem.dtype)
+    elif kind == "max":
+        new = jnp.maximum(mem, upd)
+    else:  # or: the update copy accumulated bits on top of src
+        new = mem | upd
+    out_ref[...] = jnp.where(is_dirty, new, mem)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "sat_min", "sat_max", "interpret"))
+def cmerge(table: jax.Array, block_ids: jax.Array, dirty: jax.Array,
+           src: jax.Array, upd: jax.Array, *, kind: str = "add",
+           sat_min: float = 0.0, sat_max: float = 0.0,
+           interpret: bool = True) -> jax.Array:
+    """table [R, D]; block_ids i32 [W] (-1 = invalid); dirty [W] bool/i32;
+    src, upd [W, BR, D] -> merged table [R, D]."""
+    assert kind in MERGE_KINDS, kind
+    r, d = table.shape
+    w_, br, d2 = src.shape
+    assert d2 == d and upd.shape == src.shape
+    assert r % br == 0, (r, br)
+    n_blocks = r // br
+
+    # Parking block: invalid/clean ways gather+scatter it unchanged.
+    table_pad = jnp.concatenate([table, jnp.zeros((br, d), table.dtype)])
+    ids = jnp.where((block_ids >= 0) & (dirty != 0),
+                    block_ids, n_blocks).astype(jnp.int32)
+    dirty_i = ((block_ids >= 0) & (dirty != 0)).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, kind=kind, sat_min=sat_min,
+                               sat_max=sat_max)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(w_,),
+            in_specs=[
+                pl.BlockSpec((br, d), lambda w, ids, dirty: (ids[w], 0)),
+                pl.BlockSpec((1, br, d), lambda w, ids, dirty: (w, 0, 0)),
+                pl.BlockSpec((1, br, d), lambda w, ids, dirty: (w, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((br, d), lambda w, ids, dirty: (ids[w], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(table_pad.shape, table.dtype),
+        input_output_aliases={2: 0},  # table_pad (after 2 prefetch args)
+        interpret=interpret,
+    )(ids, dirty_i, table_pad, src, upd)
+    return out[:r]

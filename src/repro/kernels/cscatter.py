@@ -1,0 +1,157 @@
+"""cscatter: commutative scatter-update with on-demand VMEM privatization.
+
+The CCache flagship kernel (DESIGN.md §3.1). Computes, for a table ``T[R, D]``
+and a stream of COps ``(ids[N], vals[N, D])``:
+
+    T[ids[n]] = apply(T[ids[n]], fold(combine, identity, vals where id matches))
+
+i.e. the paper's privatize-and-merge semantics: all contributions to a row are
+combined into a *private delta* first, and the delta is merged into memory
+once — ``apply`` observes the memory copy (paper §4.5), which is what makes
+saturating merges correct.
+
+TPU mapping of the paper's hardware:
+
+* grid = (table blocks, token chunks). The f32 VMEM scratch accumulator tile
+  ``acc[block_rows, D]`` is the privatized *update copy* (the L1 line); it
+  persists across the token-chunk grid dimension and is **merged exactly once
+  per table block, when the grid leaves the block** — merge-on-evict realized
+  as proactive scheduling (DESIGN.md §2).
+* the ADD path turns the random scatter into a dense one-hot matmul
+  ``onehot(ids)ᵀ @ vals`` — MXU-shaped, sequential-read, no gather/scatter in
+  the hot loop. MAX/OR paths use an in-kernel serial fold (vector ALU).
+* per-row ``touched`` masks implement the paper's dirty-merge optimization:
+  rows never written are merged as the identity (left bit-exact), and a block
+  whose mask stays empty writes memory back unchanged.
+
+Out-of-range and negative ids are ignored (the padding convention).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MERGE_KINDS = ("add", "sat_add", "max", "or")
+
+
+def _is_float(dtype) -> bool:
+    return jnp.issubdtype(dtype, jnp.floating)
+
+
+def _identity(kind: str, dtype):
+    if kind in ("add", "sat_add"):
+        return jnp.zeros((), dtype)
+    if kind == "max":
+        return jnp.asarray(jnp.finfo(dtype).min if _is_float(dtype)
+                           else jnp.iinfo(dtype).min, dtype)
+    if kind == "or":
+        return jnp.zeros((), dtype)
+    raise ValueError(kind)
+
+
+def _kernel(ids_ref, vals_ref, table_ref, out_ref, acc_ref, touched_ref, *,
+            kind: str, block_rows: int, chunk: int, n_chunks: int,
+            sat_min: float, sat_max: float, acc_dtype):
+    i = pl.program_id(0)   # table block
+    j = pl.program_id(1)   # token chunk
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _identity(kind, acc_dtype))
+        touched_ref[...] = jnp.zeros_like(touched_ref)
+
+    ids = ids_ref[...]                                   # [chunk] i32
+    rel = ids - i * block_rows                           # row within block
+    in_block = (rel >= 0) & (rel < block_rows)
+    vals = vals_ref[...]                                 # [chunk, D]
+
+    if kind in ("add", "sat_add"):
+        # One-hot matmul: [block_rows, chunk] @ [chunk, D] on the MXU.
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_rows, chunk), 0)
+        oh = (rows == jnp.where(in_block, rel, -1)[None, :])
+        contrib = jax.lax.dot(oh.astype(acc_dtype), vals.astype(acc_dtype),
+                              preferred_element_type=acc_dtype)
+        acc_ref[...] += contrib
+        touched_ref[...] |= jnp.any(oh, axis=1, keepdims=True)
+    else:
+        # Serial in-kernel fold (vector ALU): max / or have no MXU form.
+        def body(c, _):
+            row = rel[c]
+            ok = in_block[c]
+            safe = jnp.where(ok, row, 0)
+            cur = acc_ref[pl.dslice(safe, 1), :]
+            v = vals[c][None].astype(acc_dtype)
+            new = jnp.maximum(cur, v) if kind == "max" else cur | v
+            acc_ref[pl.dslice(safe, 1), :] = jnp.where(ok, new, cur)
+            t = touched_ref[pl.dslice(safe, 1), :]
+            touched_ref[pl.dslice(safe, 1), :] = t | ok
+            return c + 1, None
+
+        jax.lax.scan(body, 0, None, length=chunk)
+
+    @pl.when(j == n_chunks - 1)
+    def _evict_merge():
+        mem = table_ref[...]
+        u = acc_ref[...]
+        touched = touched_ref[...]                       # [block_rows, 1]
+        if kind == "add":
+            new = mem + u.astype(mem.dtype)
+        elif kind == "sat_add":
+            s = mem.astype(acc_dtype) + u
+            s = jnp.clip(s, sat_min, sat_max)
+            new = s.astype(mem.dtype)
+        elif kind == "max":
+            new = jnp.maximum(mem, u.astype(mem.dtype))
+        else:  # or
+            new = mem | u.astype(mem.dtype)
+        out_ref[...] = jnp.where(touched, new, mem)      # dirty-merge skip
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "block_rows", "chunk", "sat_min", "sat_max",
+                     "interpret"))
+def cscatter(table: jax.Array, ids: jax.Array, vals: jax.Array, *,
+             kind: str = "add", block_rows: int = 256, chunk: int = 512,
+             sat_min: float = 0.0, sat_max: float = 0.0,
+             interpret: bool = True) -> jax.Array:
+    """table [R, D]; ids i32 [N]; vals [N, D] -> updated table [R, D]."""
+    assert kind in MERGE_KINDS, kind
+    r, d = table.shape
+    n = ids.shape[0]
+    assert vals.shape == (n, d), (vals.shape, n, d)
+    block_rows = min(block_rows, r)
+    chunk = min(chunk, n)
+    assert r % block_rows == 0, (r, block_rows)
+    assert n % chunk == 0, (n, chunk)
+    ni, nj = r // block_rows, n // chunk
+    acc_dtype = jnp.float32 if _is_float(table.dtype) else table.dtype
+
+    kernel = functools.partial(
+        _kernel, kind=kind, block_rows=block_rows, chunk=chunk, n_chunks=nj,
+        sat_min=sat_min, sat_max=sat_max, acc_dtype=acc_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i, j: (j,)),        # ids
+            pl.BlockSpec((chunk, d), lambda i, j: (j, 0)),    # vals
+            pl.BlockSpec((block_rows, d), lambda i, j: (i, 0)),  # table (mem)
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), table.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows, d), acc_dtype),           # update copy
+            pltpu.VMEM((block_rows, 1), jnp.bool_),           # dirty bits
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), vals, table)

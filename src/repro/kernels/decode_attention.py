@@ -1,0 +1,96 @@
+"""Split-KV flash decode: one query token against a long KV cache.
+
+Grid = (batch, kv head, KV blocks). All G = H/KV query heads of a kv head are
+processed together as a [G, d] q tile (so the matmuls have a real M dim
+instead of 1 — MXU utilization for GQA decode). The current ``position`` is
+scalar-prefetched: block masking uses it dynamically and blocks entirely past
+the position are skipped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bk: int):
+    t = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t * bk <= pos)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)            # [G, d]
+        k = k_ref[0].astype(jnp.float32)[:, 0]         # [bk, d]
+        v = v_ref[0].astype(jnp.float32)[:, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = t * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= pos, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     position: jax.Array, *, bk: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q [B,H,d]; k,v [B,T,KV,d]; position scalar i32 -> out [B,H,d].
+
+    Attends to cache slots [0, position] (the slot at ``position`` holds the
+    current token's K/V, already written by the caller).
+    """
+    b, h, d = q.shape
+    _, t, n_kv, _ = k.shape
+    g = h // n_kv
+    bk = min(bk, t)
+    assert t % bk == 0, (t, bk)
+    qg = q.reshape(b, n_kv, g, d)
+    scale = 1.0 / d ** 0.5
+
+    kernel = functools.partial(_kernel, scale=scale, bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, n_kv, t // bk),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d), lambda bi, ki, ti, pos: (bi, ki, 0, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda bi, ki, ti, pos: (bi, ti, ki, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda bi, ki, ti, pos: (bi, ti, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bi, ki, ti, pos: (bi, ki, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),   # m
+                pltpu.VMEM((g, 1), jnp.float32),   # l
+                pltpu.VMEM((g, d), jnp.float32),   # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, d), q.dtype),
+        interpret=interpret,
+    )(position.reshape(1).astype(jnp.int32), qg, k, v)
+    return out.reshape(b, h, d)

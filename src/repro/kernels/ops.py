@@ -1,0 +1,56 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this container (CPU) kernels execute with ``interpret=True``; on a TPU
+backend the same calls compile natively. ``INTERPRET`` is resolved once from
+the backend.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cmerge import cmerge as _cmerge
+from repro.kernels.cscatter import cscatter as _cscatter
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def commutative_scatter(table, ids, vals, *, kind="add", block_rows=256,
+                        chunk=512, sat_min=0.0, sat_max=0.0):
+    """CCache scatter: ``table[ids] ⊕= vals`` with VMEM privatization."""
+    return _cscatter(table, ids, vals, kind=kind, block_rows=block_rows,
+                     chunk=chunk, sat_min=sat_min, sat_max=sat_max,
+                     interpret=INTERPRET)
+
+
+def merge_buffer(table, block_ids, dirty, src, upd, *, kind="add",
+                 sat_min=0.0, sat_max=0.0):
+    """The explicit merge instruction over a W-way source buffer."""
+    return _cmerge(table, block_ids, dirty, src, upd, kind=kind,
+                   sat_min=sat_min, sat_max=sat_max, interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, *, causal=True, bq=512, bk=512):
+    """q [B,H,S,d]; k,v [B,KV,T,d] -> [B,H,S,d]."""
+    return _flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                            interpret=INTERPRET)
+
+
+def decode_attention(q, k, v, position, *, bk=512):
+    """q [B,H,d]; k,v [B,T,KV,d]; position scalar -> [B,H,d]."""
+    return _decode_attention(q, k, v, jnp.asarray(position, jnp.int32),
+                             bk=bk, interpret=INTERPRET)
+
+
+def embedding_grad_scatter(table_grad, token_ids, out_grads, *,
+                           block_rows=512, chunk=1024):
+    """Embedding-table gradient accumulation as a CCache scatter.
+
+    token_ids [N] (flattened batch*seq), out_grads [N, D]: the KV-store
+    pattern of the paper at LM scale — ``dL/dE[v] = Σ_{n: id_n=v} g_n``.
+    """
+    return commutative_scatter(table_grad, token_ids, out_grads, kind="add",
+                               block_rows=block_rows, chunk=chunk)

@@ -1,0 +1,27 @@
+"""Roofline terms from per-device HLO costs (TPU v5e-like constants).
+
+The loop-aware cost walk lives in hlo_cost.py; this module holds the
+hardware model and the three-term roofline (brief formulas: numerators are
+chip-totals, denominators carry the chip count — so per-device quantities
+divide by per-chip rates)."""
+
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per ICI link (per-chip wire budget)
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   wire_bytes_per_device: float) -> dict:
+    terms = {
+        "compute_s": flops_per_device / PEAK_FLOPS,
+        "memory_s": hbm_bytes_per_device / HBM_BW,
+        "collective_s": wire_bytes_per_device / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    bound = terms[dom]
+    total = max(terms.values())
+    frac = terms["compute_s"] / max(bound, 1e-30)
+    return {**terms, "dominant": dom.replace("_s", ""), "bound_s": bound,
+            "compute_fraction_of_bound": frac}

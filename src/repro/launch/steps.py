@@ -1,0 +1,229 @@
+"""Step builders + sharding assembly for train / prefill / decode.
+
+Everything here works on ShapeDtypeStructs (``jax.eval_shape``) so the same
+code path serves the 512-device dry-run (no allocation) and real execution.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.grad_merge import microbatched_value_and_grad
+from repro.models.module import split_params
+from repro.models.registry import build_model
+from repro.optim import make_optimizer, warmup_cosine
+from repro.optim.optimizers import OptState
+from repro.sharding import partition
+from repro.sharding.partition import sharding_rules, spec_for
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Lowering rules: per (arch x shape x mesh) logical->mesh adjustments.
+# ---------------------------------------------------------------------------
+
+
+def lowering_rules(cfg, shape_cfg, mesh: Mesh) -> dict:
+    rules: dict = {}
+    model_size = mesh.shape.get("model", 1)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if shape_cfg.kind == "train":
+        # Megatron-style sequence parallelism for the *stored* residual
+        # stream (remat-saved layer inputs shard over the model axis) — only
+        # when the saved stack would otherwise blow past a few GB/device;
+        # for small models the resharding collectives aren't worth it.
+        tokens_per_dev = shape_cfg.global_batch * shape_cfg.seq_len // max(dp, 1)
+        saved_bytes = cfg.n_layers * tokens_per_dev * cfg.d_model * 2
+        if saved_bytes > 4 * 1024**3 and model_size > 1:
+            rules["seq_res"] = "model"
+    if shape_cfg.kind == "decode":
+        if cfg.n_kv_heads % model_size != 0:
+            # KV heads don't divide TP: shard the cache on sequence instead.
+            rules["kv_heads"] = None
+            rules["cache_seq"] = "model"
+    if cfg.n_params() > 1e11:
+        # Giants: FSDP the embed dim across pods too.
+        rules["embed"] = ("pod", "data")
+    return rules
+
+
+def axes_to_shardings(axes_tree: PyTree, specs_tree: PyTree, mesh: Mesh,
+                      rules: dict) -> PyTree:
+    """Tree of logical-axes tuples + tree of SDS -> tree of NamedShardings."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_ax, treedef = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_axes)
+    flat_sp = treedef.flatten_up_to(specs_tree)
+    out = [NamedSharding(mesh, spec_for(tuple(s.shape), a, mesh, rules))
+           for a, s in zip(flat_ax, flat_sp)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_axes(opt_specs: OptState, param_axes: PyTree) -> OptState:
+    """Logical axes for optimizer state, mirroring the parameter axes."""
+    def nu_axes(ax, nu_leaf):
+        if isinstance(nu_leaf, dict) and "row" in nu_leaf:
+            return {"row": tuple(ax[:-1]), "col": tuple(ax[:-2]) + (ax[-1],)}
+        if isinstance(nu_leaf, dict) and "full" in nu_leaf:
+            return {"full": tuple(ax)}
+        return tuple(ax)
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_ax, treedef = jax.tree_util.tree_flatten(param_axes, is_leaf=is_axes)
+
+    mu_axes = None
+    if opt_specs.mu is not None:
+        mu_axes = jax.tree_util.tree_unflatten(treedef, flat_ax)
+    flat_nu = treedef.flatten_up_to(opt_specs.nu)
+    nu = jax.tree_util.tree_unflatten(
+        treedef, [nu_axes(a, n) for a, n in zip(flat_ax, flat_nu)])
+    return OptState(step=(), mu=mu_axes, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model, cfg, optimizer, num_microbatches: int = 1):
+    def loss_fn(params, batch):
+        return model.loss(params, batch)[0]
+
+    def train_step(state, batch):
+        params = state["params"]
+        if num_microbatches > 1:
+            mb = microbatched_value_and_grad(loss_fn, num_microbatches)
+            loss, grads = mb(params, batch)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, stats = optimizer.step(params, grads, state["opt"])
+        return ({"params": params, "opt": opt_state},
+                {"loss": loss, **stats})
+
+    return train_step
+
+
+class LoweredPlan:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    def __init__(self, fn, in_specs, in_shardings, out_shardings, rules):
+        self.fn = fn
+        self.in_specs = in_specs
+        self.in_shardings = in_shardings
+        self.out_shardings = out_shardings
+        self.rules = rules
+
+    def lower(self, mesh: Mesh):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings)
+        with mesh, sharding_rules(mesh, self.rules):
+            return jitted.lower(*self.in_specs)
+
+
+def plan_train(cfg, shape_cfg, mesh: Mesh,
+               num_microbatches: Optional[int] = None,
+               extra_rules: Optional[dict] = None) -> LoweredPlan:
+    model = build_model(cfg)
+    rules = lowering_rules(cfg, shape_cfg, mesh)
+    rules.update(extra_rules or {})
+    nmb = (num_microbatches if num_microbatches is not None
+           else cfg.microbatches.get(shape_cfg.name, 1))
+
+    tagged = jax.eval_shape(model.init, jax.random.key(0))
+    param_specs, param_axes = split_params(tagged)
+    optimizer = make_optimizer(cfg, warmup_cosine(3e-4, 100, 10_000))
+    opt_specs = jax.eval_shape(optimizer.init, param_specs)
+
+    state_specs = {"params": param_specs, "opt": opt_specs}
+    params_sh = axes_to_shardings(param_axes, param_specs, mesh, rules)
+    opt_ax = opt_state_axes(opt_specs, param_axes)
+    opt_sh = OptState(
+        step=NamedSharding(mesh, P()),
+        mu=(None if opt_specs.mu is None
+            else axes_to_shardings(opt_ax.mu, opt_specs.mu, mesh, rules)),
+        nu=axes_to_shardings(opt_ax.nu, opt_specs.nu, mesh, rules))
+    state_sh = {"params": params_sh, "opt": opt_sh}
+
+    batch_specs = model.input_specs(shape_cfg)
+    batch_sh = axes_to_shardings(model.input_axes(shape_cfg), batch_specs,
+                                 mesh, rules)
+
+    step = make_train_step(model, cfg, optimizer, nmb)
+    metrics_sh = NamedSharding(mesh, P())
+    out_sh = (state_sh, {"loss": metrics_sh, "grad_norm": metrics_sh,
+                         "lr": metrics_sh})
+    return LoweredPlan(step, (state_specs, batch_specs),
+                       (state_sh, batch_sh), out_sh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def plan_prefill(cfg, shape_cfg, mesh: Mesh,
+                 extra_rules: Optional[dict] = None) -> LoweredPlan:
+    model = build_model(cfg)
+    rules = lowering_rules(cfg, shape_cfg, mesh)
+    rules.update(extra_rules or {})
+
+    tagged = jax.eval_shape(model.init, jax.random.key(0))
+    param_specs, param_axes = split_params(tagged)
+    params_sh = axes_to_shardings(param_axes, param_specs, mesh, rules)
+    batch_specs = model.input_specs(shape_cfg)
+    batch_sh = axes_to_shardings(model.input_axes(shape_cfg), batch_specs,
+                                 mesh, rules)
+
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch, shape_cfg.seq_len)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    return LoweredPlan(prefill_step, (param_specs, batch_specs),
+                       (params_sh, batch_sh), None, rules)
+
+
+def plan_decode(cfg, shape_cfg, mesh: Mesh,
+                extra_rules: Optional[dict] = None) -> LoweredPlan:
+    model = build_model(cfg)
+    rules = lowering_rules(cfg, shape_cfg, mesh)
+    rules.update(extra_rules or {})
+
+    tagged = jax.eval_shape(model.init, jax.random.key(0))
+    param_specs, param_axes = split_params(tagged)
+    params_sh = axes_to_shardings(param_axes, param_specs, mesh, rules)
+
+    in_specs = model.input_specs(shape_cfg)   # tokens, caches, position
+    in_axes = model.input_axes(shape_cfg)
+    in_sh = axes_to_shardings(in_axes, in_specs, mesh, rules)
+
+    def serve_step(params, tokens, caches, position):
+        logits, new_caches = model.decode_step(params, tokens, caches,
+                                               position)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+
+    out_sh = (axes_to_shardings(("batch",),
+                                jax.ShapeDtypeStruct(
+                                    (shape_cfg.global_batch,), jnp.int32),
+                                mesh, rules),
+              in_sh["caches"])
+    return LoweredPlan(
+        serve_step,
+        (param_specs, in_specs["tokens"], in_specs["caches"],
+         in_specs["position"]),
+        (params_sh, in_sh["tokens"], in_sh["caches"], in_sh["position"]),
+        out_sh, rules)
+
+
+def plan_for(cfg, shape_cfg, mesh: Mesh, **kw) -> LoweredPlan:
+    if shape_cfg.kind == "train":
+        return plan_train(cfg, shape_cfg, mesh, **kw)
+    if shape_cfg.kind == "prefill":
+        return plan_prefill(cfg, shape_cfg, mesh, **kw)
+    return plan_decode(cfg, shape_cfg, mesh, **kw)

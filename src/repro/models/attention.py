@@ -1,0 +1,337 @@
+"""GQA attention: training (full seq), prefill (returns KV cache), decode.
+
+Masks: causal, bidirectional (encoder), sliding-window (+ optional per-layer
+full-attention override for hybrid archs), and cross-attention (enc-dec).
+Softmax in fp32. Logical sharding: heads/kv_heads on the TP ("model") axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as nn
+from repro.models.module import px
+from repro.models.rope import apply_rope
+from repro.sharding.partition import logical_constraint as lc
+
+Array = jax.Array
+
+# Above this sequence length, full-seq attention switches to the online-
+# softmax blockwise path (memory O(chunk * T) instead of O(S * T)).
+BLOCKWISE_THRESHOLD = 4096
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Decode-time KV cache for one attention layer (or stacked layers)."""
+
+    k: Array  # [B, T, KV, hd]
+    v: Array  # [B, T, KV, hd]
+
+
+def init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int, dtype,
+         qkv_bias: bool = False) -> Any:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": nn.dense(ks[0], d_model, n_heads * head_dim,
+                       ("embed", "heads"), dtype, bias=qkv_bias),
+        "wk": nn.dense(ks[1], d_model, n_kv * head_dim,
+                       ("embed", "kv_heads"), dtype, bias=qkv_bias),
+        "wv": nn.dense(ks[2], d_model, n_kv * head_dim,
+                       ("embed", "kv_heads"), dtype, bias=qkv_bias),
+        "wo": nn.dense(ks[3], n_heads * head_dim, d_model,
+                       ("heads", "embed"), dtype),
+    }
+
+
+def _split_heads(x: Array, n: int) -> Array:
+    return x.reshape(x.shape[:-1] + (n, x.shape[-1] // n))
+
+
+def _qkv(p, x: Array, n_heads: int, n_kv: int, positions: Array,
+         rope_theta: float):
+    q = _split_heads(nn.apply_dense(p["wq"], x), n_heads)
+    k = _split_heads(nn.apply_dense(p["wk"], x), n_kv)
+    v = _split_heads(nn.apply_dense(p["wv"], x), n_kv)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: Array, g: int) -> Array:
+    """[B,T,KV,hd] -> [B,T,KV*g,hd] (head h reads kv group h//g).
+
+    Keeping the score tensor at the FULL head dim is what makes it TP-
+    shardable even when KV (or the GQA ratio) does not divide the model
+    axis: XLA gathers only the local head slice of k/v (tiny) instead of
+    all-gathering [.., S, T] scores (EXPERIMENTS §Perf, llama3 train).
+    """
+    if g == 1:
+        return k
+    return jnp.repeat(k, g, axis=2)
+
+
+def _attend(q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """q: [B,S,H,hd]; k,v: [B,T,KV,hd]; mask: [B or 1, S, T] bool."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    kf = _repeat_kv(k, g)
+    vf = _repeat_kv(v, g)
+    scores = jnp.einsum("bshd,bthd->bhst", q, kf).astype(jnp.float32)
+    scores = scores * (1.0 / hd ** 0.5)
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vf)
+    return out.reshape(b, s, h * hd)
+
+
+def _attend_grouped(q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """Decode-path attention: grouped (kv, g) einsums, same h//g mapping.
+
+    With a long KV cache sharded on the sequence axis (decode_32k rules for
+    kv-indivisible archs), the repeat-kv form makes XLA fight over the model
+    axis (head-sharded scores vs seq-sharded cache) and reshard the cache;
+    the grouped form contracts locally over the sharded T dim and reduces
+    once. Mathematically identical (q head h reads kv group h // g).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (1.0 / hd ** 0.5)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h * hd)
+
+
+def _attend_blockwise(q: Array, k: Array, v: Array, q_pos: Array,
+                      k_pos: Array, mode: str, window: Optional[int],
+                      q_chunk: int = 512) -> Array:
+    """Online-softmax attention, scanning q chunks: memory O(chunk * T).
+
+    The XLA-compilable stand-in for the flash-attention Pallas kernel
+    (kernels/flash_attention) — same asymptotic memory behavior, used for
+    long-sequence prefill where [S, T] scores cannot materialize.
+
+    With a *static* sliding window, each q chunk attends only its
+    [chunk_start - window, chunk_end) key slice — O(S*(chunk+W)) total work
+    instead of O(S*T) (the hymba prefill fix, EXPERIMENTS §Perf).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    t = k.shape[1]
+    scale = 1.0 / hd ** 0.5
+    n_chunks = s // q_chunk
+    assert s % q_chunk == 0, (s, q_chunk)
+    kf = _repeat_kv(k, g)
+    vf = _repeat_kv(v, g)
+    qc = q.reshape(b, n_chunks, q_chunk, h, hd)
+    qpc = jnp.broadcast_to(q_pos, (b, s)).reshape(b, n_chunks, q_chunk)
+    kp_full = jnp.broadcast_to(k_pos, (b, t))
+
+    windowed = (mode == "sliding" and isinstance(window, int)
+                and 0 < window and window + q_chunk < t)
+    if windowed:
+        # left-pad keys by `window` so chunk i reads [i*qc, i*qc + qc + W).
+        pad = ((0, 0), (window, 0), (0, 0), (0, 0))
+        kf = jnp.pad(kf, pad)
+        vf = jnp.pad(vf, pad)
+        kp_full = jnp.pad(kp_full, ((0, 0), (window, 0)),
+                          constant_values=-(1 << 30))
+        t_eff = q_chunk + window
+    else:
+        t_eff = t
+
+    def body(_, inp):
+        qi, qpi, idx = inp  # [B, qc, H, hd], [B, qc], []
+        if windowed:
+            start = idx * q_chunk
+            ki = jax.lax.dynamic_slice_in_dim(kf, start, t_eff, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(vf, start, t_eff, axis=1)
+            kpi = jax.lax.dynamic_slice_in_dim(kp_full, start, t_eff, axis=1)
+        else:
+            ki, vi, kpi = kf, vf, kp_full
+        scores = jnp.einsum("bshd,bthd->bhst", qi, ki).astype(jnp.float32)
+        scores = scores * scale
+        mask = make_mask(qpi, kpi, mode, window)
+        scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, vi)
+        return None, out.reshape(b, q_chunk, h * hd)
+
+    _, outs = jax.lax.scan(
+        body, None,
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(qpc, 1, 0),
+         jnp.arange(n_chunks, dtype=jnp.int32)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h * hd)
+
+
+def make_mask(q_pos: Array, k_pos: Array, mode: str,
+              window: Optional[int] = None) -> Array:
+    """[B?, S] x [B?, T] -> [B?, S, T] boolean visibility mask."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    if mode == "causal":
+        m = d >= 0
+    elif mode == "bidirectional":
+        m = jnp.ones(d.shape, bool)
+    elif mode == "sliding":
+        assert window is not None
+        m = (d >= 0) & (d < window)
+    else:
+        raise ValueError(mode)
+    return m
+
+
+def attend_full(p, x: Array, positions: Array, n_heads: int, n_kv: int,
+                mode: str = "causal", window: Optional[int] = None,
+                rope_theta: float = 10000.0) -> Array:
+    """Training / encoder path over a full sequence."""
+    q, k, v = _qkv(p, x, n_heads, n_kv, positions, rope_theta)
+    q = lc(q, ("batch", "seq", "heads", "head_dim"))
+    k = lc(k, ("batch", "seq", "kv_heads", "head_dim"))
+    s = x.shape[1]
+    if s > BLOCKWISE_THRESHOLD:
+        out = _attend_blockwise(q, k, v, positions, positions, mode, window)
+    else:
+        mask = make_mask(positions, positions, mode, window)
+        if mask.ndim == 2:
+            mask = mask[None]
+        out = _attend(q, k, v, mask)
+    return nn.apply_dense(p["wo"], out)
+
+
+def attend_cross(p, x: Array, ctx_kv: tuple[Array, Array], positions: Array,
+                 n_heads: int, n_kv: int) -> Array:
+    """Cross-attention: q from x, k/v precomputed from encoder output."""
+    q = _split_heads(nn.apply_dense(p["wq"], x), n_heads)
+    k, v = ctx_kv
+    b, s = x.shape[:2]
+    t = k.shape[1]
+    mask = jnp.ones((1, s, t), bool)
+    out = _attend(q, k, v, mask)
+    return nn.apply_dense(p["wo"], out)
+
+
+def cross_kv(p, ctx: Array, n_kv: int) -> tuple[Array, Array]:
+    k = _split_heads(nn.apply_dense(p["wk"], ctx), n_kv)
+    v = _split_heads(nn.apply_dense(p["wv"], ctx), n_kv)
+    return k, v
+
+
+def prefill(p, x: Array, positions: Array, n_heads: int, n_kv: int,
+            cache_len: int, mode: str = "causal",
+            window: Optional[int] = None, rope_theta: float = 10000.0
+            ) -> tuple[Array, KVCache]:
+    """Full-sequence forward that also materializes the KV cache."""
+    q, k, v = _qkv(p, x, n_heads, n_kv, positions, rope_theta)
+    s = x.shape[1]
+    if s > BLOCKWISE_THRESHOLD:
+        out = _attend_blockwise(q, k, v, positions, positions, mode, window)
+    else:
+        mask = make_mask(positions, positions, mode, window)
+        if mask.ndim == 2:
+            mask = mask[None]
+        out = _attend(q, k, v, mask)
+    b, s = x.shape[:2]
+    kv = n_kv
+    hd = k.shape[-1]
+    ck = jnp.zeros((b, cache_len, kv, hd), k.dtype)
+    cv = jnp.zeros((b, cache_len, kv, hd), v.dtype)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k, 0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v, 0, axis=1)
+    return nn.apply_dense(p["wo"], out), KVCache(k=ck, v=cv)
+
+
+def decode_step(p, x: Array, cache: KVCache, position: Array, n_heads: int,
+                n_kv: int, mode: str = "causal", window: Optional[int] = None,
+                rope_theta: float = 10000.0) -> tuple[Array, KVCache]:
+    """One-token decode: x [B,1,D]; position scalar int32 (current index)."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), position, jnp.int32)
+    q, k, v = _qkv(p, x, n_heads, n_kv, pos, rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, position, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, position, axis=1)
+    t = ck.shape[1]
+    k_pos = jnp.arange(t, dtype=jnp.int32)[None, :]
+    mask = make_mask(pos, k_pos, "sliding" if mode == "sliding" else "causal",
+                     window)
+    out = _attend_grouped(q, ck, cv, mask)
+    return nn.apply_dense(p["wo"], out), KVCache(k=ck, v=cv)
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer cache for sliding-window layers: O(window) memory regardless of
+# context length — what makes long_500k viable on the hybrid arch.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RingKVCache:
+    """Sliding-window cache: slot i holds the most recent position ≡ i (mod W)."""
+
+    k: Array  # [B, W, KV, hd]
+    v: Array  # [B, W, KV, hd]
+
+
+def ring_slot_positions(position: Array, window: int) -> Array:
+    """Absolute position stored in each ring slot, given current ``position``.
+
+    slot i holds q = position - ((position - i) mod W); entries with q < 0
+    are uninitialized and must be masked.
+    """
+    i = jnp.arange(window, dtype=jnp.int32)
+    return position - jnp.mod(position - i, window)
+
+
+def ring_decode_step(p, x: Array, cache: RingKVCache, position: Array,
+                     n_heads: int, n_kv: int, window: int,
+                     rope_theta: float = 10000.0) -> tuple[Array, RingKVCache]:
+    b = x.shape[0]
+    pos = jnp.full((b, 1), position, jnp.int32)
+    q, k, v = _qkv(p, x, n_heads, n_kv, pos, rope_theta)
+    slot = jnp.mod(position, window)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    k_pos = ring_slot_positions(position, window)[None, :]  # [1, W]
+    valid = (k_pos >= 0) & (k_pos <= position) & (k_pos > position - window)
+    mask = jnp.broadcast_to(valid, (b, 1, window))
+    out = _attend_grouped(q, ck, cv, mask)
+    return nn.apply_dense(p["wo"], out), RingKVCache(k=ck, v=cv)
+
+
+def ring_prefill(p, x: Array, positions: Array, n_heads: int, n_kv: int,
+                 window: int, rope_theta: float = 10000.0
+                 ) -> tuple[Array, RingKVCache]:
+    """Sliding-window full-seq forward; cache keeps only the last W tokens."""
+    q, k, v = _qkv(p, x, n_heads, n_kv, positions, rope_theta)
+    if x.shape[1] > BLOCKWISE_THRESHOLD:
+        out = _attend_blockwise(q, k, v, positions, positions, "sliding",
+                                window)
+    else:
+        mask = make_mask(positions, positions, "sliding", window)
+        if mask.ndim == 2:
+            mask = mask[None]
+        out = _attend(q, k, v, mask)
+    b, s = x.shape[:2]
+    # Scatter the last `window` tokens into their ring slots.
+    take = min(window, s)
+    last_k, last_v = k[:, s - take:], v[:, s - take:]
+    last_pos = positions[..., s - take:]
+    if last_pos.ndim == 1:
+        slots = jnp.mod(last_pos, window)
+    else:
+        slots = jnp.mod(last_pos[0], window)
+    kv_, hd = k.shape[2], k.shape[3]
+    ck = jnp.zeros((b, window, kv_, hd), k.dtype).at[:, slots].set(last_k)
+    cv = jnp.zeros((b, window, kv_, hd), v.dtype).at[:, slots].set(last_v)
+    return nn.apply_dense(p["wo"], out), RingKVCache(k=ck, v=cv)

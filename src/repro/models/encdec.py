@@ -1,0 +1,249 @@
+"""Encoder-decoder transformer (Seamless-M4T backbone).
+
+The speech/multimodal frontend is a STUB per the brief: ``input_specs``
+supplies precomputed frame embeddings ``[B, S_enc, D]`` to the encoder
+(S_enc = seq_len // FRAME_RATIO models the downsampled frame stream). The
+decoder is a standard causal transformer with cross-attention; decode shapes
+lower one decoder step against a seq_len-long self-attention cache plus the
+precomputed cross-attention KV (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention
+from repro.models import module as nn
+from repro.models.mlp import gelu_mlp, gelu_mlp_init
+from repro.models.module import px
+from repro.models.transformer import cross_entropy, remat_policy
+from repro.sharding.partition import logical_constraint as lc
+
+Array = jax.Array
+
+FRAME_RATIO = 4  # seq_len -> encoder frame count divisor (frontend stub)
+
+
+class EncDecModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.n_enc = cfg.n_enc_layers or cfg.n_layers
+        self.n_dec = cfg.n_dec_layers or cfg.n_layers
+
+    # ------------------------------------------------------------------ init
+
+    def _enc_block_init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {
+            "ln1": nn.layernorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": attention.init(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   cfg.param_dtype),
+            "ln2": nn.layernorm_init(cfg.d_model, cfg.param_dtype),
+            "ffn": gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+        }
+
+    def _dec_block_init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        return {
+            "ln1": nn.layernorm_init(cfg.d_model, cfg.param_dtype),
+            "self_attn": attention.init(ks[0], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.resolved_head_dim,
+                                        cfg.param_dtype),
+            "ln_x": nn.layernorm_init(cfg.d_model, cfg.param_dtype),
+            "cross_attn": attention.init(ks[1], cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.resolved_head_dim,
+                                         cfg.param_dtype),
+            "ln2": nn.layernorm_init(cfg.d_model, cfg.param_dtype),
+            "ffn": gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+        }
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        return {
+            "embed": {"table": px(nn.embed_init(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                                cfg.param_dtype),
+                                  ("vocab", "embed"))},
+            "enc": nn.stack_layer_init(self._enc_block_init, ks[1], self.n_enc),
+            "dec": nn.stack_layer_init(self._dec_block_init, ks[2], self.n_dec),
+            "ln_enc": nn.layernorm_init(cfg.d_model, cfg.param_dtype),
+            "ln_f": nn.layernorm_init(cfg.d_model, cfg.param_dtype),
+        }
+
+    # --------------------------------------------------------------- encoder
+
+    def encode(self, params, frames: Array) -> Array:
+        """frames: [B, S_enc, D] precomputed embeddings -> encoder output."""
+        cfg = self.cfg
+        positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+        def block(p, h):
+            h = lc(h, ("batch", "seq_res", "embed_act"))
+            a = attention.attend_full(p["attn"], nn.layernorm(p["ln1"], h),
+                                      positions, cfg.n_heads, cfg.n_kv_heads,
+                                      "bidirectional",
+                                      rope_theta=cfg.rope_theta)
+            h = h + a
+            return h + gelu_mlp(p["ffn"], nn.layernorm(p["ln2"], h))
+
+        policy = remat_policy(cfg.remat)
+        if policy is not None:
+            block = jax.checkpoint(block, policy=policy, prevent_cse=False)
+        h, _ = jax.lax.scan(lambda x, p: (block(p, x), None),
+                            frames.astype(cfg.param_dtype), params["enc"])
+        return nn.layernorm(params["ln_enc"], h)
+
+    # --------------------------------------------------------------- decoder
+
+    def _dec_block(self, p, h: Array, ctx_kv, positions: Array):
+        cfg = self.cfg
+        h = lc(h, ("batch", "seq_res", "embed_act"))
+        a = attention.attend_full(p["self_attn"], nn.layernorm(p["ln1"], h),
+                                  positions, cfg.n_heads, cfg.n_kv_heads,
+                                  "causal", rope_theta=cfg.rope_theta)
+        h = h + a
+        x = attention.attend_cross(p["cross_attn"], nn.layernorm(p["ln_x"], h),
+                                   ctx_kv, positions, cfg.n_heads,
+                                   cfg.n_kv_heads)
+        h = h + x
+        return h + gelu_mlp(p["ffn"], nn.layernorm(p["ln2"], h))
+
+    def decode_seq(self, params, tokens: Array, enc_out: Array) -> Array:
+        cfg = self.cfg
+        h = params["embed"]["table"][tokens]
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        block = self._dec_block
+        policy = remat_policy(cfg.remat)
+        if policy is not None:
+            block = jax.checkpoint(block, policy=policy, prevent_cse=False)
+
+        def body(x, p):
+            ctx_kv = attention.cross_kv(p["cross_attn"], enc_out, cfg.n_kv_heads)
+            return block(p, x, ctx_kv, positions), None
+
+        h, _ = jax.lax.scan(body, h, params["dec"])
+        return nn.layernorm(params["ln_f"], h)
+
+    def _logits(self, params, h: Array) -> Array:
+        return jnp.einsum("...d,vd->...v", h, params["embed"]["table"],
+                          preferred_element_type=jnp.float32)
+
+    # ------------------------------------------------------------------ loss
+
+    def loss(self, params, batch: dict):
+        enc_out = self.encode(params, batch["frames"])
+        h = self.decode_seq(params, batch["tokens"], enc_out)
+        logits = self._logits(params, h)
+        loss, metrics = cross_entropy(logits, batch["labels"])
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # --------------------------------------------------------------- serving
+
+    def prefill(self, params, batch: dict, cache_len: int):
+        """Encode frames, prefill the decoder; returns (logits, caches)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = params["embed"]["table"][tokens]
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def body(x, p):
+            x = lc(x, ("batch", "seq_res", "embed_act"))
+            ctx_kv = attention.cross_kv(p["cross_attn"], enc_out, cfg.n_kv_heads)
+            a, kv = attention.prefill(p["self_attn"],
+                                      nn.layernorm(p["ln1"], x), positions,
+                                      cfg.n_heads, cfg.n_kv_heads, cache_len,
+                                      "causal", rope_theta=cfg.rope_theta)
+            x = x + a
+            c = attention.attend_cross(p["cross_attn"],
+                                       nn.layernorm(p["ln_x"], x), ctx_kv,
+                                       positions, cfg.n_heads, cfg.n_kv_heads)
+            x = x + c
+            x = x + gelu_mlp(p["ffn"], nn.layernorm(p["ln2"], x))
+            return x, {"kv": kv, "cross_k": ctx_kv[0], "cross_v": ctx_kv[1]}
+
+        h, caches = jax.lax.scan(body, h, params["dec"])
+        h = nn.layernorm(params["ln_f"], h)
+        return self._logits(params, h[:, -1]), caches
+
+    def decode_step(self, params, tokens: Array, caches, position):
+        """tokens: [B]; caches carry self-attn KV + precomputed cross KV."""
+        cfg = self.cfg
+        h = params["embed"]["table"][tokens][:, None, :]
+
+        def body(x, pc):
+            p, c = pc
+            a, kv = attention.decode_step(p["self_attn"],
+                                          nn.layernorm(p["ln1"], x), c["kv"],
+                                          position, cfg.n_heads, cfg.n_kv_heads,
+                                          rope_theta=cfg.rope_theta)
+            x = x + a
+            xc = attention.attend_cross(p["cross_attn"],
+                                        nn.layernorm(p["ln_x"], x),
+                                        (c["cross_k"], c["cross_v"]),
+                                        jnp.zeros((1,), jnp.int32),
+                                        cfg.n_heads, cfg.n_kv_heads)
+            x = x + xc
+            x = x + gelu_mlp(p["ffn"], nn.layernorm(p["ln2"], x))
+            return x, {"kv": kv, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+        h, new_caches = jax.lax.scan(body, h, (params["dec"], caches))
+        h = nn.layernorm(params["ln_f"], h)
+        return self._logits(params, h[:, 0]), new_caches
+
+    # ---------------------------------------------------------- input specs
+
+    def enc_len(self, seq_len: int) -> int:
+        return max(128, seq_len // FRAME_RATIO)
+
+    def cache_specs(self, batch: int, cache_len: int, enc_len: int):
+        cfg = self.cfg
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        dt = cfg.param_dtype
+        n = self.n_dec
+        return {
+            "kv": attention.KVCache(
+                k=jax.ShapeDtypeStruct((n, batch, cache_len, kv, hd), dt),
+                v=jax.ShapeDtypeStruct((n, batch, cache_len, kv, hd), dt)),
+            "cross_k": jax.ShapeDtypeStruct((n, batch, enc_len, kv, hd), dt),
+            "cross_v": jax.ShapeDtypeStruct((n, batch, enc_len, kv, hd), dt),
+        }
+
+    def input_specs(self, shape_cfg) -> dict:
+        cfg = self.cfg
+        b, s = shape_cfg.global_batch, shape_cfg.seq_len
+        se = self.enc_len(s)
+        i32 = jnp.int32
+        dt = cfg.param_dtype
+        if shape_cfg.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((b, se, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape_cfg.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((b, se, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32),
+                "caches": self.cache_specs(b, s, se),
+                "position": jax.ShapeDtypeStruct((), i32)}
+
+    def input_axes(self, shape_cfg) -> dict:
+        ax_kv = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        if shape_cfg.kind == "train":
+            return {"frames": ("batch", "seq", "embed_act"),
+                    "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape_cfg.kind == "prefill":
+            return {"frames": ("batch", "seq", "embed_act"),
+                    "tokens": ("batch", "seq")}
+        return {"tokens": ("batch",),
+                "caches": {"kv": attention.KVCache(k=ax_kv, v=ax_kv),
+                           "cross_k": ax_kv, "cross_v": ax_kv},
+                "position": ()}

@@ -1,0 +1,257 @@
+"""Hymba-style hybrid: parallel attention + Mamba(SSM) heads per block.
+
+Each block feeds the same normalized input to (a) GQA attention and (b) a
+selective SSM, normalizes both outputs and averages them (learnable per-branch
+scales), then applies a SwiGLU FFN. Most layers use sliding-window attention;
+``cfg.full_attn_layers`` keep full (global) attention — realized as a *traced*
+window size so the stacked layers stay homogeneous and scannable for training.
+Decode unrolls layers (heterogeneous caches: ring for sliding, full for
+global) — recurrent SSM state plus bounded windows make ``long_500k`` viable
+(DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, ssm
+from repro.models import module as nn
+from repro.models.mlp import swiglu, swiglu_init
+from repro.models.module import px
+from repro.models.transformer import cross_entropy, remat_policy
+from repro.sharding.partition import logical_constraint as lc
+
+Array = jax.Array
+
+_BIG_WINDOW = 1 << 30  # sliding window so large it equals causal
+
+
+class HymbaModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        full = set(cfg.full_attn_layers)
+        self.is_global = [i in full for i in range(cfg.n_layers)]
+
+    # ------------------------------------------------------------------ init
+
+    def _block_init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        d_inner = int(cfg.d_model * cfg.ssm_expand)
+        return {
+            "ln1": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": attention.init(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   cfg.param_dtype),
+            "ssm": ssm.init(ks[1], cfg.d_model, cfg.ssm_state, d_inner,
+                            cfg.param_dtype),
+            "ln_attn": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "ln_ssm": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "beta": px(jnp.ones((2,), jnp.float32), (None,)),
+            "ln2": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "ffn": swiglu_init(ks[2], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+        }
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        return {
+            "embed": {"table": px(nn.embed_init(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                                cfg.param_dtype),
+                                  ("vocab", "embed"))},
+            "blocks": nn.stack_layer_init(self._block_init, ks[1], cfg.n_layers),
+            "ln_f": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        }
+
+    # --------------------------------------------------------------- forward
+
+    def _windows(self) -> Array:
+        cfg = self.cfg
+        w = cfg.sliding_window or _BIG_WINDOW
+        return jnp.asarray([_BIG_WINDOW if g else w for g in self.is_global],
+                           jnp.int32)
+
+    def _block(self, p, h: Array, positions: Array, window: Array):
+        cfg = self.cfg
+        h = lc(h, ("batch", "seq_res", "embed_act"))
+        x = nn.rmsnorm(p["ln1"], h)
+        a = attention.attend_full(p["attn"], x, positions, cfg.n_heads,
+                                  cfg.n_kv_heads, "sliding", window=window,
+                                  rope_theta=cfg.rope_theta)
+        s = ssm.apply_seq(p["ssm"], x)
+        beta = p["beta"].astype(jnp.float32)
+        mixed = 0.5 * (beta[0] * nn.rmsnorm(p["ln_attn"], a).astype(jnp.float32)
+                       + beta[1] * nn.rmsnorm(p["ln_ssm"], s).astype(jnp.float32))
+        h = h + mixed.astype(h.dtype)
+        return h + swiglu(p["ffn"], nn.rmsnorm(p["ln2"], h))
+
+    def forward(self, params, h: Array, positions: Array) -> Array:
+        cfg = self.cfg
+        block = self._block
+        policy = remat_policy(cfg.remat)
+        if policy is not None:
+            block = jax.checkpoint(block, policy=policy, prevent_cse=False)
+
+        def body(x, inp):
+            layer_params, window = inp
+            return block(layer_params, x, positions, window), None
+
+        h, _ = jax.lax.scan(body, h, (params["blocks"], self._windows()))
+        return nn.rmsnorm(params["ln_f"], h)
+
+    def _logits(self, params, h: Array) -> Array:
+        return jnp.einsum("...d,vd->...v", h, params["embed"]["table"],
+                          preferred_element_type=jnp.float32)
+
+    def loss(self, params, batch: dict):
+        tokens = batch["tokens"]
+        h = params["embed"]["table"][tokens]
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        h = self.forward(params, h, positions)
+        logits = self._logits(params, h)
+        loss, metrics = cross_entropy(logits, batch["labels"])
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # --------------------------------------------------------------- serving
+
+    def _layer_params(self, params, i: int):
+        return jax.tree.map(lambda x: x[i], params["blocks"])
+
+    def prefill(self, params, batch: dict, cache_len: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = params["embed"]["table"][tokens]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        caches = []
+        for i in range(cfg.n_layers):
+            p = self._layer_params(params, i)
+            h = lc(h, ("batch", "seq_res", "embed_act"))
+            x = nn.rmsnorm(p["ln1"], h)
+            if self.is_global[i]:
+                a, kv = attention.prefill(p["attn"], x, positions, cfg.n_heads,
+                                          cfg.n_kv_heads, cache_len, "causal",
+                                          rope_theta=cfg.rope_theta)
+            else:
+                a, kv = attention.ring_prefill(p["attn"], x, positions,
+                                               cfg.n_heads, cfg.n_kv_heads,
+                                               cfg.sliding_window,
+                                               rope_theta=cfg.rope_theta)
+            sst = self._ssm_prefill(p["ssm"], x)
+            s_out = ssm.apply_seq(p["ssm"], x)
+            beta = p["beta"].astype(jnp.float32)
+            mixed = 0.5 * (beta[0] * nn.rmsnorm(p["ln_attn"], a).astype(jnp.float32)
+                           + beta[1] * nn.rmsnorm(p["ln_ssm"], s_out).astype(jnp.float32))
+            h = h + mixed.astype(h.dtype)
+            h = h + swiglu(p["ffn"], nn.rmsnorm(p["ln2"], h))
+            caches.append({"kv": kv, "ssm": sst})
+        h = nn.rmsnorm(params["ln_f"], h)
+        return self._logits(params, h[:, -1]), caches
+
+    def _ssm_prefill(self, p, x: Array) -> ssm.SSMState:
+        """Final SSM state after the sequence (for decode continuation)."""
+        b, t, _ = x.shape
+        xz = nn.apply_dense(p["in_proj"], x)
+        u, _ = jnp.split(xz, 2, axis=-1)
+        u_conv, hist = ssm._conv1d_causal(p["conv_w"], p["conv_b"], u)
+        u_act = jax.nn.silu(u_conv)
+        chunk = min(256, t)
+        n_chunks = t // chunk
+        d_inner = u.shape[-1]
+        uc = u_act.reshape(b, n_chunks, chunk, d_inner)
+
+        def body(h0, u_ck):
+            da, dbx, _ = ssm._ssm_params(p, u_ck)
+            _, h_last = ssm._scan_chunk(da, dbx, h0)
+            return h_last, None
+
+        d_state = p["a_log"].shape[1]
+        h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+        h_final, _ = jax.lax.scan(body, h0, jnp.moveaxis(uc, 1, 0))
+        k = p["conv_w"].shape[0]
+        return ssm.SSMState(h=h_final, conv=u[:, -(k - 1):])
+
+    def decode_step(self, params, tokens: Array, caches, position):
+        cfg = self.cfg
+        h = params["embed"]["table"][tokens][:, None, :]
+        new_caches = []
+        for i in range(cfg.n_layers):
+            p = self._layer_params(params, i)
+            x = nn.rmsnorm(p["ln1"], h)
+            c = caches[i]
+            if self.is_global[i]:
+                a, kv = attention.decode_step(p["attn"], x, c["kv"], position,
+                                              cfg.n_heads, cfg.n_kv_heads,
+                                              rope_theta=cfg.rope_theta)
+            else:
+                a, kv = attention.ring_decode_step(p["attn"], x, c["kv"],
+                                                   position, cfg.n_heads,
+                                                   cfg.n_kv_heads,
+                                                   cfg.sliding_window,
+                                                   rope_theta=cfg.rope_theta)
+            s_out, sst = ssm.decode_step(p["ssm"], x, c["ssm"])
+            beta = p["beta"].astype(jnp.float32)
+            mixed = 0.5 * (beta[0] * nn.rmsnorm(p["ln_attn"], a).astype(jnp.float32)
+                           + beta[1] * nn.rmsnorm(p["ln_ssm"], s_out).astype(jnp.float32))
+            h = h + mixed.astype(h.dtype)
+            h = h + swiglu(p["ffn"], nn.rmsnorm(p["ln2"], h))
+            new_caches.append({"kv": kv, "ssm": sst})
+        h = nn.rmsnorm(params["ln_f"], h)
+        return self._logits(params, h[:, 0]), new_caches
+
+    # ---------------------------------------------------------- input specs
+
+    def cache_specs(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        d_inner = int(cfg.d_model * cfg.ssm_expand)
+        dt = cfg.param_dtype
+        f32 = jnp.float32
+        out = []
+        for g in self.is_global:
+            t = cache_len if g else min(cfg.sliding_window, cache_len)
+            kv_cls = attention.KVCache if g else attention.RingKVCache
+            out.append({
+                "kv": kv_cls(k=jax.ShapeDtypeStruct((batch, t, kv, hd), dt),
+                             v=jax.ShapeDtypeStruct((batch, t, kv, hd), dt)),
+                "ssm": ssm.SSMState(
+                    h=jax.ShapeDtypeStruct((batch, d_inner, cfg.ssm_state), f32),
+                    conv=jax.ShapeDtypeStruct((batch, 3, d_inner), dt)),
+            })
+        return out
+
+    def cache_axes(self):
+        ax = ("batch", "cache_seq", "kv_heads", "head_dim")
+        out = []
+        for g in self.is_global:
+            kv_cls = attention.KVCache if g else attention.RingKVCache
+            out.append({
+                "kv": kv_cls(k=ax, v=ax),
+                "ssm": ssm.SSMState(h=("batch", "mlp", "state"),
+                                    conv=("batch", None, "mlp")),
+            })
+        return out
+
+    def input_specs(self, shape_cfg) -> dict:
+        b, s = shape_cfg.global_batch, shape_cfg.seq_len
+        i32 = jnp.int32
+        if shape_cfg.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape_cfg.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32),
+                "caches": self.cache_specs(b, s),
+                "position": jax.ShapeDtypeStruct((), i32)}
+
+    def input_axes(self, shape_cfg) -> dict:
+        if shape_cfg.kind == "train":
+            return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape_cfg.kind == "prefill":
+            return {"tokens": ("batch", "seq")}
+        return {"tokens": ("batch",), "caches": self.cache_axes(),
+                "position": ()}

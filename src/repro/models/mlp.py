@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (enc-dec)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as nn
+
+Array = jax.Array
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> Any:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": nn.dense(ks[0], d_model, d_ff, ("embed", "mlp"), dtype),
+        "wi_up": nn.dense(ks[1], d_model, d_ff, ("embed", "mlp"), dtype),
+        "wo": nn.dense(ks[2], d_ff, d_model, ("mlp", "embed"), dtype),
+    }
+
+
+def swiglu(p, x: Array) -> Array:
+    g = jax.nn.silu(nn.apply_dense(p["wi_gate"], x))
+    u = nn.apply_dense(p["wi_up"], x)
+    return nn.apply_dense(p["wo"], g * u)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype, bias: bool = True) -> Any:
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": nn.dense(ks[0], d_model, d_ff, ("embed", "mlp"), dtype, bias=bias),
+        "wo": nn.dense(ks[1], d_ff, d_model, ("mlp", "embed"), dtype, bias=bias),
+    }
+
+
+def gelu_mlp(p, x: Array) -> Array:
+    return nn.apply_dense(p["wo"], jax.nn.gelu(nn.apply_dense(p["wi"], x)))

@@ -1,0 +1,113 @@
+"""Minimal functional module system: param pytrees + logical sharding axes.
+
+Every parameter leaf is created through ``px(value, axes)`` where ``axes`` is
+a tuple of *logical* axis names (one per dim, e.g. ``("embed", "mlp")``).
+``split_params`` separates a tagged tree into a plain param tree and a
+parallel tree of axis tuples; ``sharding/partition.py`` maps logical axes to
+mesh axes. Stacked (scanned) layers prepend the ``"layers"`` axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Px:
+    """A tagged parameter leaf: value + logical axis names (static)."""
+
+    value: Array
+    axes: tuple = dataclasses.field(metadata={"static": True})
+
+
+def px(value: Array, axes: tuple[str | None, ...]) -> Px:
+    assert len(axes) == value.ndim, (axes, value.shape)
+    return Px(value, tuple(axes))
+
+
+def split_params(tree: Any) -> tuple[Any, Any]:
+    """Tagged tree -> (plain param tree, logical-axes tree)."""
+    is_px = lambda x: isinstance(x, Px)
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_px)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_px)
+    return params, axes
+
+
+def stack_layer_init(init_fn, key: Array, n_layers: int) -> Any:
+    """vmap an init over layer keys; leaves gain a leading "layers" axis."""
+    keys = jax.random.split(key, n_layers)
+    tagged = jax.vmap(init_fn)(keys)
+    is_px = lambda x: isinstance(x, Px)
+    return jax.tree.map(lambda p: Px(p.value, ("layers",) + p.axes), tagged,
+                        is_leaf=is_px)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (match common LM practice: truncated-normal fan-in scaling).
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_dims: int = 1) -> Array:
+    fan_in = 1
+    for d in shape[:in_dims]:
+        fan_in *= d
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def dense(key, d_in, d_out, axes, dtype, bias=False, bias_axes=None):
+    p = {"w": px(dense_init(key, (d_in, d_out), dtype), axes)}
+    if bias:
+        p["b"] = px(jnp.zeros((d_out,), dtype), bias_axes or (axes[-1],))
+    return p
+
+
+def apply_dense(p, x: Array) -> Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 compute).
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Any:
+    return {"scale": px(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rmsnorm(p, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> Any:
+    return {"scale": px(jnp.ones((d,), dtype), ("embed",)),
+            "bias": px(jnp.zeros((d,), dtype), ("embed",))}
+
+
+def layernorm(p, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, EP sharding.
+
+Baseline dispatch is sort-based with static capacity (GShard-style dropping):
+tokens are scattered into an [E, C, D] buffer (``mode="drop"`` implements
+capacity overflow = the paper's approximate merge / way-eviction discipline),
+expert FFNs run as grouped einsums with E sharded on the "model" axis (EP),
+and results are combined with a **commutative scatter-add** — the token-combine
+is CData in the paper's sense (order-free, merged additively). Router load
+counters are commutative counters (merged with ADD across the mesh).
+
+The hillclimbed all-to-all shard_map variant lives in moe_a2a.py (see
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as nn
+from repro.models.module import px
+from repro.models.mlp import swiglu, swiglu_init
+from repro.sharding.partition import logical_constraint as lc
+
+Array = jax.Array
+
+
+def init(key, d_model: int, d_ff: int, n_experts: int, dtype,
+         n_shared: int = 0) -> Any:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": px(nn.dense_init(ks[0], (d_model, n_experts),
+                                         jnp.float32), ("embed", "expert"))},
+        "wi_gate": px(nn.dense_init(ks[1], (n_experts, d_model, d_ff), dtype,
+                                    in_dims=2), ("expert", "embed", "expert_mlp")),
+        "wi_up": px(nn.dense_init(ks[2], (n_experts, d_model, d_ff), dtype,
+                                  in_dims=2), ("expert", "embed", "expert_mlp")),
+        "wo": px(nn.dense_init(ks[3], (n_experts, d_ff, d_model), dtype,
+                               in_dims=2), ("expert", "expert_mlp", "embed")),
+    }
+    if n_shared:
+        p["shared"] = swiglu_init(ks[4], d_model, d_ff * n_shared, dtype)
+    return p
+
+
+def route(router_w: Array, x: Array, top_k: int):
+    """x: [T, D] -> (weights [T,k], ids [T,k], probs [T,E])."""
+    logits = (x.astype(jnp.float32) @ router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)
+    w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)  # renormalize top-k
+    return w, ids, probs
+
+
+def positions_in_expert(e_flat: Array, n_experts: int) -> Array:
+    """Slot index of each assignment within its expert (stable order)."""
+    n = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(n_experts), side="left")
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - seg_start[e_sorted].astype(jnp.int32)
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+
+
+def capacity_for(n_tokens: int, top_k: int, n_experts: int,
+                 capacity_factor: float) -> int:
+    c = int(n_tokens * top_k * capacity_factor / n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def apply(p, x: Array, top_k: int, capacity_factor: float = 1.25,
+          token_chunk: int = 131072) -> tuple[Array, dict[str, Array]]:
+    """x: [B, S, D] -> (out [B,S,D], metrics). Dropped tokens pass through 0
+    (residual connection carries them — the approximate-merge semantics).
+
+    Token streams longer than ``token_chunk`` (32k prefill) are processed in
+    sequential chunks so the [E, C, D] dispatch buffer stays bounded — the
+    same working-set discipline as the paper's w-way privatization limit.
+    """
+    b, s, d = x.shape
+    t = b * s
+    if t > token_chunk and t % token_chunk == 0:
+        xc = x.reshape(t // token_chunk, 1, token_chunk, d)
+
+        def body(_, xi):
+            out, metrics = _apply_tokens(p, xi, top_k, capacity_factor)
+            return None, (out, metrics)
+
+        _, (outs, ms) = jax.lax.scan(body, None, xc)
+        out = outs.reshape(b, s, d)
+        return out, jax.tree.map(lambda m: jnp.mean(m, axis=0), ms)
+    out, metrics = _apply_tokens(p, x, top_k, capacity_factor)
+    return out, metrics
+
+
+def _apply_tokens(p, x: Array, top_k: int, capacity_factor: float
+                  ) -> tuple[Array, dict[str, Array]]:
+    b, s, d = x.shape
+    n_experts = p["wi_gate"].shape[0]
+    xt = x.reshape(b * s, d)
+    t = b * s
+
+    w, ids, probs = route(p["router"]["w"], xt, top_k)
+
+    n = t * top_k
+    e_flat = ids.reshape(n)
+    w_flat = w.reshape(n)
+    token_idx = jnp.arange(n, dtype=jnp.int32) // top_k
+
+    cap = capacity_for(t, top_k, n_experts, capacity_factor)
+    pos = positions_in_expert(e_flat, n_experts)
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)  # cap = out-of-range -> dropped
+
+    buf = jnp.zeros((n_experts, cap, d), x.dtype)
+    buf = buf.at[e_flat, slot].set(xt[token_idx], mode="drop")
+    buf = lc(buf, ("expert", "capacity", "embed_act"))
+
+    # Grouped expert FFN (SwiGLU), E on the model axis (EP).
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", g * u, p["wo"])
+    out_buf = lc(out_buf, ("expert", "capacity", "embed_act"))
+
+    y = out_buf.at[e_flat, slot].get(mode="fill", fill_value=0)  # [N, D]
+    y = y * (w_flat * keep)[:, None].astype(y.dtype)
+    # Commutative combine: order-free scatter-add over token ids (CData).
+    out = jnp.zeros((t, d), x.dtype).at[token_idx].add(y)
+
+    if "shared" in p:
+        out = out + swiglu(p["shared"], xt)
+
+    # Commutative counters (merged additively across the mesh by the psum the
+    # data-parallel loss reduction induces).
+    e_one = jax.nn.one_hot(ids[:, 0], n_experts, dtype=jnp.float32)
+    frac_tokens = e_one.mean(axis=0)                     # f_e
+    mean_prob = probs.mean(axis=0)                       # P_e
+    aux_loss = n_experts * jnp.sum(frac_tokens * mean_prob)
+    dispatched = jnp.sum(keep.astype(jnp.float32))
+    metrics = {
+        "aux_loss": aux_loss,
+        "router_z": jnp.mean(jax.nn.logsumexp(
+            jnp.log(probs + 1e-9), axis=-1) ** 2),
+        "drop_frac": 1.0 - dispatched / n,
+        "expert_load": e_one.sum(axis=0),
+    }
+    return out.reshape(b, s, d), metrics

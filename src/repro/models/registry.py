@@ -1,0 +1,25 @@
+"""Model registry: config family -> model implementation."""
+
+from __future__ import annotations
+
+from repro.models.encdec import EncDecModel
+from repro.models.hymba import HymbaModel
+from repro.models.transformer import DecoderLM
+from repro.models.xlstm_lm import XLSTMModel
+
+_FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "ssm": XLSTMModel,
+    "hybrid": HymbaModel,
+    "encdec": EncDecModel,
+}
+
+
+def build_model(cfg):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family: {cfg.family!r}") from None
+    return cls(cfg)

@@ -1,0 +1,137 @@
+"""Mamba-style selective SSM (the hybrid arch's parallel-head branch).
+
+Training path: chunked associative scan (chunk=256) — parallel within a chunk,
+sequential across chunks, bounding the [T, d_inner, d_state] intermediate to
+one chunk (the TPU-memory-hierarchy adaptation of the CUDA selective-scan
+kernel; see DESIGN.md §2). Decode path: O(1) recurrent state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as nn
+from repro.models.module import px
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMState:
+    """Decode-time recurrent state."""
+
+    h: Array        # [B, d_inner, d_state]
+    conv: Array     # [B, k-1, d_inner] trailing conv inputs
+
+
+def init(key, d_model: int, d_state: int, d_inner: int, dtype,
+         conv_k: int = 4, dt_rank: int | None = None) -> Any:
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": nn.dense(ks[0], d_model, 2 * d_inner, ("embed", "mlp"), dtype),
+        "conv_w": px(nn.dense_init(ks[1], (conv_k, d_inner), dtype), ("conv", "mlp")),
+        "conv_b": px(jnp.zeros((d_inner,), dtype), ("mlp",)),
+        "x_bc": nn.dense(ks[2], d_inner, 2 * d_state, ("mlp", "state"), dtype),
+        "x_dt": nn.dense(ks[3], d_inner, dt_rank, ("mlp", "state"), dtype),
+        "dt_proj": nn.dense(ks[4], dt_rank, d_inner, ("state", "mlp"), dtype,
+                            bias=True),
+        "a_log": px(jnp.log(a), ("mlp", "state")),
+        "d_skip": px(jnp.ones((d_inner,), jnp.float32), ("mlp",)),
+        "out_proj": nn.dense(ks[5], d_inner, d_model, ("mlp", "embed"), dtype),
+    }
+
+
+def _conv1d_causal(w: Array, b: Array, x: Array, history: Array | None = None):
+    """Depthwise causal conv. x: [B,T,C]; w: [k,C]. history: [B,k-1,C]."""
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_hist = xp[:, -(k - 1):] if k > 1 else history
+    return out + b, new_hist
+
+
+def _ssm_params(p, u: Array):
+    """u: [..., T, d_inner] -> (da [...], dbx, c) for the scan."""
+    dt = jax.nn.softplus(nn.apply_dense(p["dt_proj"],
+                                        nn.apply_dense(p["x_dt"], u)).astype(jnp.float32))
+    bc = nn.apply_dense(p["x_bc"], u).astype(jnp.float32)
+    b, c = jnp.split(bc, 2, axis=-1)              # [..., T, d_state]
+    a = -jnp.exp(p["a_log"])                      # [d_inner, d_state]
+    da = jnp.exp(dt[..., None] * a)               # [..., T, d_inner, d_state]
+    dbx = (dt * u.astype(jnp.float32))[..., None] * b[..., None, :]
+    return da, dbx, c
+
+
+def _scan_chunk(da: Array, dbx: Array, h0: Array):
+    """First-order recurrence h_t = da_t * h_{t-1} + dbx_t within a chunk."""
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    # Fold the carry-in into the first step.
+    dbx = dbx.at[:, 0].add(da[:, 0] * h0)
+    a_acc, h = jax.lax.associative_scan(op, (da, dbx), axis=1)
+    return h, h[:, -1]
+
+
+def apply_seq(p, x: Array, chunk: int = 256) -> Array:
+    """Training/prefill forward. x: [B, T, d_model] -> [B, T, d_model]."""
+    b, t, _ = x.shape
+    xz = nn.apply_dense(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, _ = _conv1d_causal(p["conv_w"], p["conv_b"], u)
+    u = jax.nn.silu(u)
+
+    d_inner = u.shape[-1]
+    d_state = p["a_log"].shape[1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+    uc = u.reshape(b, n_chunks, chunk, d_inner)
+
+    def body(h, u_ck):
+        da, dbx, c = _ssm_params(p, u_ck)        # [B, chunk, ...]
+        h_seq, h_last = _scan_chunk(da, dbx, h)
+        y = jnp.einsum("btds,bts->btd", h_seq, c)
+        return h_last, y
+
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, jnp.moveaxis(uc, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, d_inner)
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return nn.apply_dense(p["out_proj"], y)
+
+
+def init_state(p, batch: int) -> SSMState:
+    d_inner, d_state = p["a_log"].shape
+    conv_k = p["conv_w"].shape[0]
+    return SSMState(
+        h=jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        conv=jnp.zeros((batch, conv_k - 1, d_inner), p["conv_w"].dtype))
+
+
+def decode_step(p, x: Array, state: SSMState) -> tuple[Array, SSMState]:
+    """x: [B, 1, d_model] -> ([B, 1, d_model], state')."""
+    xz = nn.apply_dense(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_hist = _conv1d_causal(p["conv_w"], p["conv_b"], u, state.conv)
+    u = jax.nn.silu(u)
+    da, dbx, c = _ssm_params(p, u)               # [B, 1, ...]
+    h = da[:, 0] * state.h + dbx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, c[:, 0])[:, None]
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return nn.apply_dense(p["out_proj"], y), SSMState(h=h, conv=conv_hist)

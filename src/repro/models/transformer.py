@@ -1,0 +1,333 @@
+"""Unified decoder-only transformer LM (dense / MoE / VLM-backbone).
+
+Covers qwen1.5-0.5b, granite-34b, llama3-405b, internlm2-1.8b, llava-next-34b
+(embeds-input backbone), qwen3-moe-235b, kimi-k2-1t. Layers run under
+``lax.scan`` over stacked params with configurable remat; MoE stacks may be
+preceded by ``first_dense_layers`` unrolled dense blocks (Kimi K2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, moe
+from repro.models import module as nn
+from repro.models.mlp import gelu_mlp, gelu_mlp_init, swiglu, swiglu_init
+from repro.models.module import px
+from repro.sharding.partition import logical_constraint as lc
+
+Array = jax.Array
+
+
+def remat_policy(name: str):
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+def cross_entropy(logits_f32: Array, labels: Array, z_coeff: float = 1e-4):
+    """logits: [..., V] fp32; labels int32 (< 0 = ignore)."""
+    lse = jax.nn.logsumexp(logits_f32, axis=-1)
+    gold = jnp.take_along_axis(
+        logits_f32, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    z_loss = z_coeff * ((lse * mask) ** 2).sum() / denom
+    return loss + z_loss, {"nll": loss, "z_loss": z_loss}
+
+
+class DecoderLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.is_moe = cfg.family == "moe"
+        self.embeds_input = cfg.family == "vlm"
+        self._ffn_init = gelu_mlp_init if cfg.mlp == "gelu" else swiglu_init
+        self._ffn = gelu_mlp if cfg.mlp == "gelu" else swiglu
+
+    # ------------------------------------------------------------------ init
+
+    def _block_init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p = {
+            "ln1": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": attention.init(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   cfg.param_dtype, qkv_bias=cfg.qkv_bias),
+            "ln2": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        }
+        if self.is_moe:
+            p["moe"] = moe.init(ks[1], cfg.d_model, cfg.d_ff_expert,
+                                cfg.n_experts, cfg.param_dtype,
+                                n_shared=cfg.n_shared_experts)
+        else:
+            p["ffn"] = self._ffn_init(ks[1], cfg.d_model, cfg.d_ff,
+                                      cfg.param_dtype)
+        return p
+
+    def _dense_block_init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        d_ff = cfg.d_ff or 4 * cfg.d_ff_expert
+        return {
+            "ln1": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": attention.init(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   cfg.param_dtype, qkv_bias=cfg.qkv_bias),
+            "ln2": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "ffn": self._ffn_init(ks[1], cfg.d_model, d_ff, cfg.param_dtype),
+        }
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        n_scan = cfg.n_layers - cfg.first_dense_layers
+        params = {
+            "embed": {"table": px(nn.embed_init(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                                cfg.param_dtype),
+                                  ("vocab", "embed"))},
+            "blocks": nn.stack_layer_init(self._block_init, ks[1], n_scan),
+            "ln_f": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        }
+        if cfg.first_dense_layers:
+            dks = jax.random.split(ks[2], cfg.first_dense_layers)
+            params["dense_blocks"] = [self._dense_block_init(k) for k in dks]
+        if not cfg.tie_embeddings:
+            params["unembed"] = {"w": px(
+                nn.dense_init(ks[3], (cfg.d_model, cfg.padded_vocab), cfg.param_dtype),
+                ("embed", "vocab"))}
+        return params
+
+    # --------------------------------------------------------------- forward
+
+    def _moe(self, p, x: Array):
+        cfg = self.cfg
+        from repro.sharding.partition import active_mesh
+        mesh = active_mesh()
+        if cfg.moe_impl == "ep" and mesh is not None and \
+                "model" in mesh.shape and \
+                cfg.n_experts % mesh.shape["model"] == 0:
+            from repro.models.moe_ep import apply_ep
+            return apply_ep(p, x, cfg.top_k, cfg.capacity_factor, mesh)
+        return moe.apply(p, x, cfg.top_k, cfg.capacity_factor)
+
+    def _block(self, p, h: Array, positions: Array, dense_ffn: bool = False):
+        cfg = self.cfg
+        h = lc(h, ("batch", "seq_res", "embed_act"))
+        a = attention.attend_full(p["attn"], nn.rmsnorm(p["ln1"], h), positions,
+                                  cfg.n_heads, cfg.n_kv_heads, "causal",
+                                  rope_theta=cfg.rope_theta)
+        h = h + a
+        x = nn.rmsnorm(p["ln2"], h)
+        if self.is_moe and not dense_ffn:
+            f, metrics = self._moe(p["moe"], x)
+        else:
+            f, metrics = self._ffn(p["ffn"], x), {}
+        return h + f, metrics
+
+    def forward(self, params, h: Array, positions: Array):
+        cfg = self.cfg
+        for dp in params.get("dense_blocks", []):
+            h, _ = self._block(dp, h, positions, dense_ffn=True)
+
+        block = functools.partial(self._block, positions=positions)
+        policy = remat_policy(cfg.remat)
+        if policy is not None:
+            block = jax.checkpoint(block, policy=policy, prevent_cse=False)
+
+        def body(x, layer_params):
+            x, metrics = block(layer_params, x)
+            return x, metrics
+
+        h, metrics = jax.lax.scan(body, h, params["blocks"])
+        metrics = jax.tree.map(jnp.sum, metrics) if metrics else {}
+        return nn.rmsnorm(params["ln_f"], h), metrics
+
+    def _embed(self, params, tokens: Array) -> Array:
+        return params["embed"]["table"][tokens]
+
+    def _logits(self, params, h: Array) -> Array:
+        if self.cfg.tie_embeddings:
+            w = params["embed"]["table"].T
+        else:
+            w = params["unembed"]["w"]
+        return jnp.einsum("...d,dv->...v", h, w,
+                          preferred_element_type=jnp.float32)
+
+    # ------------------------------------------------------------------ loss
+
+    def loss(self, params, batch: dict):
+        cfg = self.cfg
+        if self.embeds_input and "embeds" in batch:
+            h = batch["embeds"].astype(cfg.param_dtype)
+        else:
+            h = self._embed(params, batch["tokens"])
+        s = h.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        h, moe_metrics = self.forward(params, h, positions)
+        logits = self._logits(params, h)
+        loss, metrics = cross_entropy(logits, batch["labels"])
+        if moe_metrics:
+            loss = loss + 0.01 * moe_metrics["aux_loss"] / cfg.n_layers \
+                + 1e-3 * moe_metrics["router_z"] / cfg.n_layers
+            metrics.update({k: v for k, v in moe_metrics.items()
+                            if k != "expert_load"})
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # --------------------------------------------------------------- serving
+
+    def cache_len(self, shape_cfg) -> int:
+        return shape_cfg.seq_len
+
+    def _block_prefill(self, p, h, positions, cache_len):
+        cfg = self.cfg
+        h = lc(h, ("batch", "seq_res", "embed_act"))
+        a, cache = attention.prefill(p["attn"], nn.rmsnorm(p["ln1"], h),
+                                     positions, cfg.n_heads, cfg.n_kv_heads,
+                                     cache_len, "causal",
+                                     rope_theta=cfg.rope_theta)
+        h = h + a
+        x = nn.rmsnorm(p["ln2"], h)
+        if self.is_moe and "moe" in p:
+            f, _ = moe.apply(p["moe"], x, cfg.top_k, cfg.capacity_factor)
+        else:
+            f = self._ffn(p["ffn"], x)
+        return h + f, cache
+
+    def prefill(self, params, batch: dict, cache_len: int):
+        """Returns (last-position logits [B, V], stacked KV caches)."""
+        cfg = self.cfg
+        if self.embeds_input and "embeds" in batch:
+            h = batch["embeds"].astype(cfg.param_dtype)
+        else:
+            h = self._embed(params, batch["tokens"])
+        s = h.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        dense_caches = []
+        for dp in params.get("dense_blocks", []):
+            h, c = self._block_prefill(dp, h, positions, cache_len)
+            dense_caches.append(c)
+
+        def body(x, layer_params):
+            x, cache = self._block_prefill(layer_params, x, positions, cache_len)
+            return x, cache
+
+        h, caches = jax.lax.scan(body, h, params["blocks"])
+        h = nn.rmsnorm(params["ln_f"], h)
+        logits = self._logits(params, h[:, -1])
+        all_caches = {"scan": caches}
+        if dense_caches:
+            all_caches["dense"] = dense_caches
+        return logits, all_caches
+
+    def _block_decode(self, p, h, cache, position):
+        cfg = self.cfg
+        a, cache = attention.decode_step(p["attn"], nn.rmsnorm(p["ln1"], h),
+                                         cache, position, cfg.n_heads,
+                                         cfg.n_kv_heads, "causal",
+                                         rope_theta=cfg.rope_theta)
+        h = h + a
+        x = nn.rmsnorm(p["ln2"], h)
+        if self.is_moe and "moe" in p:
+            f, _ = moe.apply(p["moe"], x, cfg.top_k, cfg.capacity_factor)
+        else:
+            f = self._ffn(p["ffn"], x)
+        return h + f, cache
+
+    def decode_step(self, params, tokens: Array, caches, position):
+        """tokens: [B] int32; position: scalar int32 -> (logits [B,V], caches)."""
+        h = self._embed(params, tokens)[:, None, :]
+
+        new_dense = []
+        for dp, c in zip(params.get("dense_blocks", []),
+                         caches.get("dense", [])):
+            h, c = self._block_decode(dp, h, c, position)
+            new_dense.append(c)
+
+        def body(x, pc):
+            layer_params, cache = pc
+            x, cache = self._block_decode(layer_params, x, cache, position)
+            return x, cache
+
+        h, scan_caches = jax.lax.scan(body, h, (params["blocks"], caches["scan"]))
+        h = nn.rmsnorm(params["ln_f"], h)
+        logits = self._logits(params, h[:, 0])
+        out = {"scan": scan_caches}
+        if new_dense:
+            out["dense"] = new_dense
+        return logits, out
+
+    # ---------------------------------------------------------- input specs
+
+    def cache_specs(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        n_scan = cfg.n_layers - cfg.first_dense_layers
+        kv = cfg.n_kv_heads
+        hd = cfg.resolved_head_dim
+        one = lambda pre: attention.KVCache(
+            k=jax.ShapeDtypeStruct(pre + (batch, cache_len, kv, hd),
+                                   cfg.param_dtype),
+            v=jax.ShapeDtypeStruct(pre + (batch, cache_len, kv, hd),
+                                   cfg.param_dtype))
+        specs = {"scan": one((n_scan,))}
+        if cfg.first_dense_layers:
+            specs["dense"] = [one(()) for _ in range(cfg.first_dense_layers)]
+        return specs
+
+    def cache_axes(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        ax = ("batch", "cache_seq", "kv_heads", "head_dim")
+        one_scan = attention.KVCache(k=("layers",) + ax, v=("layers",) + ax)
+        specs = {"scan": one_scan}
+        if cfg.first_dense_layers:
+            specs["dense"] = [attention.KVCache(k=ax, v=ax)
+                              for _ in range(cfg.first_dense_layers)]
+        return specs
+
+    def input_specs(self, shape_cfg) -> dict:
+        cfg = self.cfg
+        b, s = shape_cfg.global_batch, shape_cfg.seq_len
+        i32 = jnp.int32
+        if shape_cfg.kind == "train":
+            if self.embeds_input:
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                       cfg.param_dtype),
+                        "labels": jax.ShapeDtypeStruct((b, s), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape_cfg.kind == "prefill":
+            if self.embeds_input:
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                       cfg.param_dtype)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        # decode: one new token against a seq_len-long cache
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32),
+                "caches": self.cache_specs(b, s),
+                "position": jax.ShapeDtypeStruct((), i32)}
+
+    def input_axes(self, shape_cfg) -> dict:
+        """Logical axes for each input (for shardings)."""
+        if shape_cfg.kind == "train":
+            if self.embeds_input:
+                return {"embeds": ("batch", "seq", "embed_act"),
+                        "labels": ("batch", "seq")}
+            return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape_cfg.kind == "prefill":
+            if self.embeds_input:
+                return {"embeds": ("batch", "seq", "embed_act")}
+            return {"tokens": ("batch", "seq")}
+        return {"tokens": ("batch",),
+                "caches": self.cache_axes(shape_cfg.global_batch,
+                                          shape_cfg.seq_len),
+                "position": ()}

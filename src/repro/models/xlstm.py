@@ -1,0 +1,306 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunked-parallel) + sLSTM (scalar).
+
+mLSTM is a linear-attention-like recurrence with exponential input gates and
+stabilized log-space accumulation:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (matrix memory, per head)
+    n_t = f_t n_{t-1} + i_t k_t              (normalizer)
+    h_t = o_t * (C_t q_t) / max(|n_t q_t|, 1)
+
+The training path uses the chunkwise form (intra-chunk quadratic + carried
+state across chunks), the same HBM->VMEM working-set discipline as ssm.py:
+the [T, d, d] state sequence never materializes. Decode is the O(1) recurrent
+step. sLSTM is inherently sequential (memory mixing through recurrent
+weights) and runs as a lax.scan over time; the paper's technique is
+orthogonal to it (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as nn
+from repro.models.module import px
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MLSTMState:
+    """Decode-time state for one mLSTM layer."""
+
+    c: Array   # [B, H, d, d]   matrix memory (stored at scale exp(m))
+    n: Array   # [B, H, d]      normalizer (same scale)
+    m: Array   # [B, H]         log-scale stabilizer
+    conv: Array  # [B, k-1, d_inner] trailing causal-conv inputs
+
+
+def init(key, d_model: int, n_heads: int, dtype, proj_factor: float = 2.0,
+         conv_k: int = 4) -> Any:
+    d_inner = int(d_model * proj_factor)
+    d_head = d_inner // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": nn.dense(ks[0], d_model, 2 * d_inner, ("embed", "mlp"), dtype),
+        "conv_w": px(nn.dense_init(ks[1], (conv_k, d_inner), dtype), ("conv", "mlp")),
+        "conv_b": px(jnp.zeros((d_inner,), dtype), ("mlp",)),
+        "wq": nn.dense(ks[2], d_inner, d_inner, ("mlp", "heads"), dtype),
+        "wk": nn.dense(ks[3], d_inner, d_inner, ("mlp", "heads"), dtype),
+        "wv": nn.dense(ks[4], d_inner, d_inner, ("mlp", "heads"), dtype),
+        # Gates: input/forget from x (per head), output per channel.
+        "w_if": nn.dense(ks[5], d_inner, 2 * n_heads, ("mlp", "heads"), dtype,
+                         bias=True),
+        "w_o": nn.dense(ks[6], d_inner, d_inner, ("mlp", "mlp"), dtype),
+        "ln_h": nn.rmsnorm_init(d_inner, dtype),
+        "out_proj": nn.dense(ks[7], d_inner, d_model, ("mlp", "embed"), dtype),
+    }
+
+
+def _heads(x: Array, h: int) -> Array:
+    """[..., T, H*d] -> [..., H, T, d]"""
+    y = x.reshape(x.shape[:-1] + (h, x.shape[-1] // h))
+    return jnp.moveaxis(y, -2, -3)
+
+
+def _mlstm_chunk(q, k, v, li, lf, state: tuple[Array, Array, Array]):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: [B,H,c,d]; li,lf: [B,H,c] log input/forget gates.
+    state: (C [B,H,d,d], n [B,H,d], m [B,H]) at scale exp(m).
+    Returns (h [B,H,c,d], new state).
+    """
+    c_in, n_in, m_in = state
+    eps = 1e-6
+    cum = jnp.cumsum(lf, axis=-1)                     # L_t (inclusive)
+    # D[t,s] = L_t - L_s + li_s  for s <= t (contribution of step s at t).
+    d_mat = cum[..., :, None] - cum[..., None, :] + li[..., None, :]
+    tri = jnp.tril(jnp.ones(d_mat.shape[-2:], bool))
+    d_mat = jnp.where(tri, d_mat, -jnp.inf)
+    m_intra = jnp.max(d_mat, axis=-1)                 # [B,H,c]
+    m_carry = cum + m_in[..., None]                   # carry-in at scale m_in
+    m_t = jnp.maximum(m_intra, m_carry)
+    m_t = jnp.maximum(m_t, -1e30)                     # guard all -inf rows
+
+    w = jnp.exp(d_mat - m_t[..., None])               # [B,H,c,c]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * w
+    intra = jnp.einsum("bhts,bhsd->bhtd", scores, v)
+    carry_scale = jnp.exp(m_carry - m_t)              # [B,H,c]
+    # c_in is [v-dim, k-dim]: contract q with the k-dim (matches decode).
+    inter = jnp.einsum("bhtd,bhed->bhte", q, c_in) * carry_scale[..., None]
+    num = intra + inter
+
+    n_intra = jnp.einsum("bhts,bhsd->bhtd", w, k)
+    n_t = n_intra + n_in[..., None, :] * carry_scale[..., None]
+    qn = jnp.abs(jnp.einsum("bhtd,bhtd->bht", q, n_t))
+    denom = jnp.maximum(qn, jnp.exp(-m_t)) + eps
+    h = num / denom[..., None]
+
+    # Chunk-end carry at scale m_out.
+    l_end = cum[..., -1:]                             # [B,H,1]
+    d_end = l_end - cum + li                          # decay of step s to end
+    m_end_intra = jnp.max(d_end, axis=-1)
+    m_end_carry = l_end[..., 0] + m_in
+    m_out = jnp.maximum(m_end_intra, m_end_carry)
+    w_end = jnp.exp(d_end - m_out[..., None])         # [B,H,c]
+    c_out = jnp.einsum("bhs,bhsd,bhse->bhde", w_end, v, k) \
+        + c_in * jnp.exp(m_end_carry - m_out)[..., None, None]
+    n_out = jnp.einsum("bhs,bhsd->bhd", w_end, k) \
+        + n_in * jnp.exp(m_end_carry - m_out)[..., None]
+    return h, (c_out, n_out, m_out)
+
+
+def _gates_qkv(p, u: Array, n_heads: int):
+    """u: [B,T,d_inner] -> q,k,v [B,H,T,d], li, lf [B,H,T]."""
+    d_head = u.shape[-1] // n_heads
+    q = _heads(nn.apply_dense(p["wq"], u), n_heads)
+    k = _heads(nn.apply_dense(p["wk"], u), n_heads) / (d_head ** 0.5)
+    v = _heads(nn.apply_dense(p["wv"], u), n_heads)
+    gif = nn.apply_dense(p["w_if"], u).astype(jnp.float32)  # [B,T,2H]
+    li = jnp.moveaxis(gif[..., :n_heads], -1, -2)            # exp input gate
+    lf = jax.nn.log_sigmoid(jnp.moveaxis(gif[..., n_heads:], -1, -2))
+    return (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), li, lf)
+
+
+def apply_seq(p, x: Array, n_heads: int, chunk: int = 256) -> Array:
+    """mLSTM layer over a full sequence. x: [B,T,D] -> [B,T,D]."""
+    from repro.models.ssm import _conv1d_causal
+
+    b, t, _ = x.shape
+    xz = nn.apply_dense(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u_conv, _ = _conv1d_causal(p["conv_w"], p["conv_b"], u)
+    u_conv = jax.nn.silu(u_conv)
+
+    q, k, v, li, lf = _gates_qkv(p, u_conv, n_heads)
+    d_inner = u.shape[-1]
+    d_head = d_inner // n_heads
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+
+    def body(state, inp):
+        qc, kc, vc, lic, lfc = inp
+        h, state = _mlstm_chunk(qc, kc, vc, lic, lfc, state)
+        return state, h
+
+    split = lambda a: jnp.moveaxis(
+        a.reshape(a.shape[:2] + (n_chunks, chunk) + a.shape[3:]), 2, 0)
+    state0 = (jnp.zeros((b, n_heads, d_head, d_head), jnp.float32),
+              jnp.zeros((b, n_heads, d_head), jnp.float32),
+              jnp.full((b, n_heads), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(
+        body, state0, (split(q), split(k), split(v), split(li), split(lf)))
+    h = jnp.moveaxis(hs, 0, 2).reshape(b, n_heads, t, d_head)
+    h = jnp.moveaxis(h, 1, 2).reshape(b, t, d_inner).astype(x.dtype)
+
+    h = nn.rmsnorm(p["ln_h"], h)
+    # Learnable skip (xLSTM block): gate by the z branch.
+    h = (h + nn.apply_dense(p["w_o"], u_conv)) * jax.nn.silu(z)
+    return nn.apply_dense(p["out_proj"], h)
+
+
+def init_state(p, batch: int, n_heads: int) -> MLSTMState:
+    d_inner = p["out_proj"]["w"].value.shape[0] if isinstance(
+        p["out_proj"]["w"], nn.Px) else p["out_proj"]["w"].shape[0]
+    d_head = d_inner // n_heads
+    conv_k = (p["conv_w"].value if isinstance(p["conv_w"], nn.Px)
+              else p["conv_w"]).shape[0]
+    return MLSTMState(
+        c=jnp.zeros((batch, n_heads, d_head, d_head), jnp.float32),
+        n=jnp.zeros((batch, n_heads, d_head), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, conv_k - 1, d_inner), jnp.float32))
+
+
+def decode_step(p, x: Array, state: MLSTMState, n_heads: int
+                ) -> tuple[Array, MLSTMState]:
+    """One-token mLSTM step. x: [B,1,D]."""
+    from repro.models.ssm import _conv1d_causal
+
+    xz = nn.apply_dense(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u_conv, conv_hist = _conv1d_causal(p["conv_w"], p["conv_b"], u,
+                                       state.conv.astype(u.dtype))
+    u_conv = jax.nn.silu(u_conv)
+    q, k, v, li, lf = _gates_qkv(p, u_conv, n_heads)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]       # [B,H,d]
+    li, lf = li[:, :, 0], lf[:, :, 0]                  # [B,H]
+
+    m_new = jnp.maximum(lf + state.m, li)
+    decay = jnp.exp(lf + state.m - m_new)
+    inject = jnp.exp(li - m_new)
+    c = state.c * decay[..., None, None] \
+        + jnp.einsum("bhd,bhe->bhde", v, k) * inject[..., None, None]
+    n = state.n * decay[..., None] + k * inject[..., None]
+    num = jnp.einsum("bhd,bhed->bhe", q, c)            # C q
+    qn = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    h = num / (jnp.maximum(qn, jnp.exp(-m_new)) + 1e-6)[..., None]
+
+    b = x.shape[0]
+    d_inner = u.shape[-1]
+    h = h.reshape(b, 1, d_inner).astype(x.dtype)
+    h = nn.rmsnorm(p["ln_h"], h)
+    h = (h + nn.apply_dense(p["w_o"], u_conv)) * jax.nn.silu(z)
+    out = nn.apply_dense(p["out_proj"], h)
+    return out, MLSTMState(c=c, n=n, m=m_new, conv=conv_hist.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory + memory mixing (block-diagonal recurrence). Sequential.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SLSTMState:
+    c: Array  # [B, d]
+    n: Array  # [B, d]
+    h: Array  # [B, d]
+    m: Array  # [B, d]
+
+
+def slstm_init(key, d_model: int, n_heads: int, dtype,
+               ffn_factor: float = 4.0 / 3.0) -> Any:
+    d_head = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    d_ff = int(d_model * ffn_factor)
+    return {
+        # 4 gates (z,i,f,o) from input; recurrent mixing is block-diagonal.
+        "w_x": nn.dense(ks[0], d_model, 4 * d_model, ("embed", "mlp"), dtype,
+                        bias=True),
+        "r": px(nn.dense_init(ks[1], (n_heads, d_head, 4 * d_head), dtype,
+                              in_dims=2), ("heads", "head_dim", "mlp")),
+        "ln_h": nn.rmsnorm_init(d_model, dtype),
+        "up": nn.dense(ks[2], d_model, d_ff, ("embed", "mlp"), dtype),
+        "down": nn.dense(ks[3], d_ff, d_model, ("mlp", "embed"), dtype),
+    }
+
+
+def _slstm_cell(p, x_gates: Array, state: SLSTMState, n_heads: int
+                ) -> SLSTMState:
+    """x_gates: [B, 4*d] precomputed input contributions."""
+    b, d4 = x_gates.shape
+    d = d4 // 4
+    d_head = d // n_heads
+    hh = state.h.reshape(b, n_heads, d_head)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r"]).reshape(b, 4 * d)
+    # Per-head interleave: recurrent output is [B,H,4*dh] -> regroup to gates.
+    rec = rec.reshape(b, n_heads, 4, d_head)
+    xg = x_gates.reshape(b, 4, n_heads, d_head)
+    pre = (xg + jnp.moveaxis(rec, 2, 1)).astype(jnp.float32)
+    zt = jnp.tanh(pre[:, 0]).reshape(b, d)
+    it = pre[:, 1].reshape(b, d)                      # log-space input gate
+    ft = jax.nn.log_sigmoid(pre[:, 2]).reshape(b, d)  # log forget
+    ot = jax.nn.sigmoid(pre[:, 3]).reshape(b, d)
+    m_new = jnp.maximum(ft + state.m, it)
+    c = jnp.exp(ft + state.m - m_new) * state.c + jnp.exp(it - m_new) * zt
+    n = jnp.exp(ft + state.m - m_new) * state.n + jnp.exp(it - m_new)
+    h = ot * (c / jnp.maximum(n, 1e-6))
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_apply_seq(p, x: Array, n_heads: int) -> Array:
+    """Sequential sLSTM over T. x: [B,T,D]."""
+    b, t, d = x.shape
+    x_gates = nn.apply_dense(p["w_x"], x)             # [B,T,4D]
+    state0 = SLSTMState(c=jnp.zeros((b, d), jnp.float32),
+                        n=jnp.zeros((b, d), jnp.float32),
+                        h=jnp.zeros((b, d), jnp.float32),
+                        m=jnp.full((b, d), -1e30, jnp.float32))
+
+    def body(state, xg):
+        state = _slstm_cell(p, xg, state, n_heads)
+        return state, state.h
+
+    _, hs = jax.lax.scan(body, state0, jnp.moveaxis(x_gates, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)        # [B,T,D]
+    h = nn.rmsnorm(p["ln_h"], h)
+    return nn.apply_dense(p["down"], jax.nn.gelu(nn.apply_dense(p["up"], h)))
+
+
+def slstm_init_state(batch: int, d: int) -> SLSTMState:
+    return SLSTMState(c=jnp.zeros((batch, d), jnp.float32),
+                      n=jnp.zeros((batch, d), jnp.float32),
+                      h=jnp.zeros((batch, d), jnp.float32),
+                      m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def slstm_decode_step(p, x: Array, state: SLSTMState, n_heads: int
+                      ) -> tuple[Array, SLSTMState]:
+    """x: [B,1,D]."""
+    xg = nn.apply_dense(p["w_x"], x[:, 0])
+    state = _slstm_cell(p, xg, state, n_heads)
+    h = state.h[:, None].astype(x.dtype)
+    h = nn.rmsnorm(p["ln_h"], h)
+    return nn.apply_dense(p["down"], jax.nn.gelu(nn.apply_dense(p["up"], h))), state

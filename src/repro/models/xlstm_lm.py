@@ -1,0 +1,216 @@
+"""xLSTM language model: alternating mLSTM / sLSTM residual blocks.
+
+``cfg.slstm_every = k`` makes every k-th block an sLSTM (0 = all mLSTM).
+Blocks are unrolled (heterogeneous structure; layer counts are small for this
+family). Recurrent state is O(1) in context length, so this arch runs the
+``long_500k`` shape (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as nn
+from repro.models import xlstm
+from repro.models.module import px
+from repro.models.transformer import cross_entropy
+from repro.sharding.partition import logical_constraint as lc
+
+Array = jax.Array
+
+
+class XLSTMModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        k = cfg.slstm_every
+        self.kinds = ["slstm" if (k and (i % k == k - 1)) else "mlstm"
+                      for i in range(cfg.n_layers)]
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, cfg.n_layers + 2)
+        blocks = []
+        for i, kind in enumerate(self.kinds):
+            p = {"ln": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype)}
+            if kind == "mlstm":
+                p["mlstm"] = xlstm.init(ks[i], cfg.d_model, cfg.n_heads,
+                                        cfg.param_dtype,
+                                        proj_factor=cfg.ssm_expand)
+            else:
+                p["slstm"] = xlstm.slstm_init(ks[i], cfg.d_model, cfg.n_heads,
+                                              cfg.param_dtype)
+            blocks.append(p)
+        return {
+            "embed": {"table": px(nn.embed_init(ks[-2], (cfg.padded_vocab, cfg.d_model),
+                                                cfg.param_dtype),
+                                  ("vocab", "embed"))},
+            "blocks": blocks,
+            "ln_f": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        }
+
+    # --------------------------------------------------------------- forward
+
+    def _forward(self, params, h: Array) -> Array:
+        cfg = self.cfg
+        for p, kind in zip(params["blocks"], self.kinds):
+            h = lc(h, ("batch", "seq_res", "embed_act"))
+            x = nn.rmsnorm(p["ln"], h)
+            if kind == "mlstm":
+                h = h + xlstm.apply_seq(p["mlstm"], x, cfg.n_heads)
+            else:
+                h = h + xlstm.slstm_apply_seq(p["slstm"], x, cfg.n_heads)
+        return nn.rmsnorm(params["ln_f"], h)
+
+    def _logits(self, params, h: Array) -> Array:
+        return jnp.einsum("...d,vd->...v", h, params["embed"]["table"],
+                          preferred_element_type=jnp.float32)
+
+    def loss(self, params, batch: dict):
+        h = params["embed"]["table"][batch["tokens"]]
+        h = self._forward(params, h)
+        logits = self._logits(params, h)
+        loss, metrics = cross_entropy(logits, batch["labels"])
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # --------------------------------------------------------------- serving
+
+    def prefill(self, params, batch: dict, cache_len: int):
+        """Returns (last logits [B,V], per-layer recurrent states).
+
+        Prefill scans the sequence through the recurrent form to produce the
+        decode state (chunked mLSTM carries the state natively).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = params["embed"]["table"][tokens]
+        states = []
+        for p, kind in zip(params["blocks"], self.kinds):
+            h = lc(h, ("batch", "seq_res", "embed_act"))
+            x = nn.rmsnorm(p["ln"], h)
+            if kind == "mlstm":
+                h = h + xlstm.apply_seq(p["mlstm"], x, cfg.n_heads)
+                states.append(self._mlstm_prefill_state(p["mlstm"], x, b))
+            else:
+                h = h + xlstm.slstm_apply_seq(p["slstm"], x, cfg.n_heads)
+                states.append(self._slstm_prefill_state(p["slstm"], x, b))
+        h = nn.rmsnorm(params["ln_f"], h)
+        return self._logits(params, h[:, -1]), states
+
+    def _mlstm_prefill_state(self, p, x: Array, b: int):
+        # Re-run the chunked scan keeping only the final carry (cheap relative
+        # to the full forward; shares compilation with apply_seq pieces).
+        cfg = self.cfg
+        from repro.models.ssm import _conv1d_causal
+        xz = nn.apply_dense(p["in_proj"], x)
+        u, _ = jnp.split(xz, 2, axis=-1)
+        u_conv, _ = _conv1d_causal(p["conv_w"], p["conv_b"], u)
+        u_conv = jax.nn.silu(u_conv)
+        q, k, v, li, lf = xlstm._gates_qkv(p, u_conv, cfg.n_heads)
+        t = x.shape[1]
+        chunk = min(256, t)
+        n_chunks = t // chunk
+        d_inner = u.shape[-1]
+        d_head = d_inner // cfg.n_heads
+        split = lambda a: jnp.moveaxis(
+            a.reshape(a.shape[:2] + (n_chunks, chunk) + a.shape[3:]), 2, 0)
+        state0 = (jnp.zeros((b, cfg.n_heads, d_head, d_head), jnp.float32),
+                  jnp.zeros((b, cfg.n_heads, d_head), jnp.float32),
+                  jnp.full((b, cfg.n_heads), -1e30, jnp.float32))
+
+        def body(st, inp):
+            _, st = xlstm._mlstm_chunk(*inp, st)
+            return st, None
+
+        (c, n, m), _ = jax.lax.scan(
+            body, state0, (split(q), split(k), split(v), split(li), split(lf)))
+        conv_k = p["conv_w"].shape[0] if not hasattr(p["conv_w"], "value") else \
+            p["conv_w"].value.shape[0]
+        hist = u[:, -(conv_k - 1):].astype(jnp.float32)
+        return xlstm.MLSTMState(c=c, n=n, m=m, conv=hist)
+
+    def _slstm_prefill_state(self, p, x: Array, b: int):
+        cfg = self.cfg
+        x_gates = nn.apply_dense(p["w_x"], x)
+        state0 = xlstm.slstm_init_state(b, cfg.d_model)
+
+        def body(state, xg):
+            return xlstm._slstm_cell(p, xg, state, cfg.n_heads), None
+
+        state, _ = jax.lax.scan(body, state0, jnp.moveaxis(x_gates, 1, 0))
+        return state
+
+    def decode_step(self, params, tokens: Array, states, position):
+        cfg = self.cfg
+        h = params["embed"]["table"][tokens][:, None, :]
+        new_states = []
+        for p, kind, st in zip(params["blocks"], self.kinds, states):
+            x = nn.rmsnorm(p["ln"], h)
+            if kind == "mlstm":
+                y, st = xlstm.decode_step(p["mlstm"], x, st, cfg.n_heads)
+            else:
+                y, st = xlstm.slstm_decode_step(p["slstm"], x, st, cfg.n_heads)
+            h = h + y
+            new_states.append(st)
+        h = nn.rmsnorm(params["ln_f"], h)
+        return self._logits(params, h[:, 0]), new_states
+
+    # ---------------------------------------------------------- input specs
+
+    def state_specs(self, batch: int):
+        cfg = self.cfg
+        d_inner = int(cfg.d_model * cfg.ssm_expand)
+        d_head = d_inner // cfg.n_heads
+        f32 = jnp.float32
+        out = []
+        for kind in self.kinds:
+            if kind == "mlstm":
+                out.append(xlstm.MLSTMState(
+                    c=jax.ShapeDtypeStruct((batch, cfg.n_heads, d_head, d_head), f32),
+                    n=jax.ShapeDtypeStruct((batch, cfg.n_heads, d_head), f32),
+                    m=jax.ShapeDtypeStruct((batch, cfg.n_heads), f32),
+                    conv=jax.ShapeDtypeStruct((batch, 3, d_inner), f32)))
+            else:
+                s = jax.ShapeDtypeStruct((batch, cfg.d_model), f32)
+                out.append(xlstm.SLSTMState(c=s, n=s, h=s, m=s))
+        return out
+
+    def state_axes(self):
+        out = []
+        for kind in self.kinds:
+            if kind == "mlstm":
+                out.append(xlstm.MLSTMState(
+                    c=("batch", "heads", None, None),
+                    n=("batch", "heads", None),
+                    m=("batch", "heads"),
+                    conv=("batch", None, "mlp")))
+            else:
+                ax = ("batch", "embed_act")
+                out.append(xlstm.SLSTMState(c=ax, n=ax, h=ax, m=ax))
+        return out
+
+    def input_specs(self, shape_cfg) -> dict:
+        b, s = shape_cfg.global_batch, shape_cfg.seq_len
+        i32 = jnp.int32
+        if shape_cfg.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape_cfg.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32),
+                "caches": self.state_specs(b),
+                "position": jax.ShapeDtypeStruct((), i32)}
+
+    def input_axes(self, shape_cfg) -> dict:
+        if shape_cfg.kind == "train":
+            return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape_cfg.kind == "prefill":
+            return {"tokens": ("batch", "seq")}
+        return {"tokens": ("batch",), "caches": self.state_axes(),
+                "position": ()}

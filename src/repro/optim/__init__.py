@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    OptState,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    make_optimizer,
+)
+from repro.optim.schedules import constant, warmup_cosine

@@ -1,0 +1,138 @@
+"""Optimizers: AdamW and Adafactor (factored second moment, for >=34B).
+
+Functional API:
+
+    opt = make_optimizer(cfg, schedule)
+    state = opt.init(params)
+    params, state, stats = opt.step(params, grads, state)
+
+Optimizer states carry the same logical axes as their parameters, so FSDP
+reduce-scatters moments alongside params (sharding/partition.py rules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree          # first moment (AdamW) or None
+    nu: PyTree          # second moment / factored rows+cols
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    step: Callable[[PyTree, PyTree, OptState], tuple[PyTree, OptState, dict]]
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw(schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          max_grad_norm=1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+
+    def step(params, grads, state):
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+        t = state.step + 1
+        lr = schedule(t)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_mu = treedef.flatten_up_to(state.mu)
+        leaves_nu = treedef.flatten_up_to(state.nu)
+        out = [upd(*args) for args in zip(leaves_p, leaves_g, leaves_mu,
+                                          leaves_nu)]
+        params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+        nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return params, OptState(step=t, mu=mu, nu=nu), {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init=init, step=step)
+
+
+def adafactor(schedule, decay=0.8, eps=1e-30, weight_decay=0.0,
+              max_grad_norm=1.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern): O(n+m) state for
+    an [n, m] matrix instead of O(nm) — the optimizer for 405B/1T configs."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def nu_for(p):
+            if _factored(p.shape):
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(step=jnp.zeros((), jnp.int32), mu=None,
+                        nu=jax.tree.map(nu_for, params))
+
+    def step(params, grads, state):
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+        t = state.step + 1
+        lr = schedule(t)
+        beta = 1.0 - (t.astype(jnp.float32)) ** (-decay)
+
+        def upd(p, g, nu):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "full" in nu:
+                nu_new = {"full": beta * nu["full"] + (1 - beta) * g2}
+                u = g / (jnp.sqrt(nu_new["full"]) + 1e-12)
+            else:
+                row = beta * nu["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * nu["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                nu_new = {"row": row, "col": col}
+                r = row / jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), eps)
+                v = r[..., None] * col[..., None, :]
+                u = g / (jnp.sqrt(v) + 1e-12)
+            # Update clipping (RMS <= 1) per Adafactor.
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nu_new
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_nu = treedef.flatten_up_to(state.nu)
+        out = [upd(*args) for args in zip(leaves_p, leaves_g, leaves_nu)]
+        params_new = jax.tree.unflatten(treedef, [o[0] for o in out])
+        nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return params_new, OptState(step=t, mu=None, nu=nu), \
+            {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init=init, step=step)
+
+
+def make_optimizer(arch_cfg, schedule) -> Optimizer:
+    if arch_cfg.optimizer == "adafactor":
+        return adafactor(schedule)
+    return adamw(schedule)

@@ -1,0 +1,143 @@
+"""Pallas kernel sweeps vs. the pure-jnp oracles (interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.cscatter import cscatter
+
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kind", ["add", "max", "sat_add"])
+@pytest.mark.parametrize("r,d,n,br,ch", [
+    (64, 8, 128, 16, 32),
+    (128, 32, 256, 32, 64),
+    (256, 16, 64, 256, 64),   # single table block
+    (32, 128, 512, 8, 512),   # single chunk
+])
+def test_cscatter_sweep(dtype, kind, r, d, n, br, ch):
+    table = jax.random.normal(jax.random.key(0), (r, d)).astype(dtype)
+    ids = jax.random.randint(jax.random.key(1), (n,), -3, r)
+    vals = jax.random.normal(jax.random.key(2), (n, d)).astype(dtype)
+    out = cscatter(table, ids, vals, kind=kind, block_rows=br, chunk=ch,
+                   sat_min=-2.0, sat_max=2.0)
+    gold = ref.ref_cscatter(table, ids, vals, kind, -2.0, 2.0)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(gold, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 8)
+
+
+def test_cscatter_or_int():
+    table = jnp.zeros((64, 8), jnp.int32)
+    ids = jax.random.randint(jax.random.key(1), (128,), 0, 64)
+    vals = jax.random.randint(jax.random.key(2), (128, 8), 0, 2**30)
+    out = cscatter(table, ids, vals, kind="or", block_rows=16, chunk=32)
+    gold = ref.ref_cscatter_serial(table, ids, vals, "or")
+    assert jnp.array_equal(out, gold)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_cscatter_matches_serialization_property(seed):
+    """Privatize-and-merge == *some serialization* of the COp stream (the
+    paper's correctness contract), for the additive merge."""
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    table = jax.random.normal(k1, (32, 4))
+    ids = jax.random.randint(k2, (64,), 0, 32)
+    vals = jax.random.normal(k3, (64, 4))
+    out = cscatter(table, ids, vals, kind="add", block_rows=8, chunk=16)
+    gold = ref.ref_cscatter_serial(table, ids, vals, "add")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cscatter_untouched_rows_bit_exact():
+    table = jax.random.normal(jax.random.key(0), (64, 8))
+    ids = jnp.asarray([3, 3, 5], jnp.int32)
+    vals = jnp.ones((3, 8))
+    out = cscatter(table, ids, vals, kind="sat_add", block_rows=16,
+                   chunk=3, sat_min=-0.5, sat_max=0.5)
+    mask = jnp.zeros((64,), bool).at[jnp.asarray([3, 5])].set(True)
+    assert jnp.array_equal(out[~mask], table[~mask])  # dirty-merge skip
+
+
+# ---------------------------------------------------------------- cmerge
+
+
+@pytest.mark.parametrize("kind", ["add", "max", "sat_add"])
+def test_cmerge_vs_ref(kind):
+    r, d, w, br = 64, 16, 4, 8
+    table = jax.random.normal(jax.random.key(0), (r, d))
+    block_ids = jnp.asarray([5, -1, 0, 5 if False else 2], jnp.int32)
+    dirty = jnp.asarray([1, 1, 0, 1], jnp.int32)
+    src = jax.random.normal(jax.random.key(1), (w, br, d))
+    upd = src + jax.random.normal(jax.random.key(2), (w, br, d))
+    out = ops.merge_buffer(table, block_ids, dirty, src, upd, kind=kind,
+                           sat_min=-3.0, sat_max=3.0)
+    gold = ref.ref_cmerge(table, np.asarray(block_ids), np.asarray(dirty),
+                          src, upd, kind, -3.0, 3.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cmerge_clean_ways_skipped():
+    table = jax.random.normal(jax.random.key(0), (32, 4))
+    src = jnp.zeros((2, 8, 4))
+    upd = jnp.ones((2, 8, 4)) * 100        # would corrupt if merged
+    out = ops.merge_buffer(table, jnp.asarray([0, 1], jnp.int32),
+                           jnp.asarray([0, 0], jnp.int32), src, upd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(table))
+
+
+# ------------------------------------------------------------- attention
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,kv", [(8, 8), (8, 2), (4, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(dtype, h, kv, causal):
+    b, s, d = 2, 128, 32
+    q = jax.random.normal(jax.random.key(0), (b, h, s, d)).astype(dtype)
+    k = jax.random.normal(jax.random.key(1), (b, kv, s, d)).astype(dtype)
+    v = jax.random.normal(jax.random.key(2), (b, kv, s, d)).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    gold = ref.ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(gold, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 4)
+
+
+@pytest.mark.parametrize("pos", [0, 1, 37, 127])
+def test_decode_attention_positions(pos):
+    b, h, kv, t, d = 2, 8, 2, 128, 32
+    q = jax.random.normal(jax.random.key(0), (b, h, d))
+    k = jax.random.normal(jax.random.key(1), (b, t, kv, d))
+    v = jax.random.normal(jax.random.key(2), (b, t, kv, d))
+    out = ops.decode_attention(q, k, v, jnp.asarray(pos), bk=32)
+    gold = ref.ref_decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_grad_scatter_equals_autodiff():
+    """The flagship use: cscatter reproduces the embedding-table gradient."""
+    v, d, n = 64, 16, 256
+    table = jax.random.normal(jax.random.key(0), (v, d))
+    tok = jax.random.randint(jax.random.key(1), (n,), 0, v)
+    tgt = jax.random.normal(jax.random.key(2), (n, d))
+
+    def loss(tab):
+        return jnp.sum((tab[tok] - tgt) ** 2)
+
+    gold = jax.grad(loss)(table)
+    out_grads = 2.0 * (table[tok] - tgt)
+    got = ops.embedding_grad_scatter(jnp.zeros_like(table), tok, out_grads,
+                                     block_rows=16, chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(gold),
+                               rtol=1e-4, atol=1e-4)

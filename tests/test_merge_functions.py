@@ -1,0 +1,110 @@
+"""Property tests for the merge-function algebra (the paper's §4.5 contract:
+combine is commutative+associative, identity is neutral, apply observes the
+memory copy)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import merge_functions as mf
+
+FLOAT_MERGES = [mf.ADD, mf.MAX, mf.MIN, mf.saturating_add(5.0, -5.0)]
+INT_MERGES = [mf.BITWISE_OR, mf.BITWISE_AND]
+
+floats = st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                  min_size=4, max_size=4)
+ints = st.lists(st.integers(0, 2**20), min_size=4, max_size=4)
+
+
+@pytest.mark.parametrize("m", FLOAT_MERGES, ids=lambda m: m.name)
+@given(a=floats, b=floats, c=floats)
+@settings(max_examples=25, deadline=None)
+def test_combine_commutative_associative_float(m, a, b, c):
+    a, b, c = (jnp.asarray(x, jnp.float32) for x in (a, b, c))
+    ab = m.combine(a, b)
+    ba = m.combine(b, a)
+    np.testing.assert_allclose(ab, ba, rtol=1e-6)
+    abc1 = m.combine(m.combine(a, b), c)
+    abc2 = m.combine(a, m.combine(b, c))
+    np.testing.assert_allclose(abc1, abc2, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m", INT_MERGES, ids=lambda m: m.name)
+@given(a=ints, b=ints, c=ints)
+@settings(max_examples=25, deadline=None)
+def test_combine_commutative_associative_int(m, a, b, c):
+    a, b, c = (jnp.asarray(x, jnp.int32) for x in (a, b, c))
+    assert jnp.array_equal(m.combine(a, b), m.combine(b, a))
+    assert jnp.array_equal(m.combine(m.combine(a, b), c),
+                           m.combine(a, m.combine(b, c)))
+
+
+@pytest.mark.parametrize("m", FLOAT_MERGES + INT_MERGES,
+                         ids=lambda m: m.name)
+def test_identity_neutral(m):
+    dtype = jnp.int32 if m in INT_MERGES else jnp.float32
+    x = jnp.asarray([1, 2, 3, -4] if dtype == jnp.int32
+                    else [1.0, -2.5, 3.25, 0.0], dtype)
+    e = m.identity(x.shape, x.dtype)
+    np.testing.assert_allclose(np.asarray(m.combine(x, e)), np.asarray(x))
+
+
+@given(src=floats, upd=floats, mem=floats)
+@settings(max_examples=25, deadline=None)
+def test_add_delta_apply_semantics(src, upd, mem):
+    """apply(mem, delta(src, upd)) == mem + (upd - src) for ADD."""
+    src, upd, mem = (jnp.asarray(x, jnp.float32) for x in (src, upd, mem))
+    out = mf.ADD.apply(mem, mf.ADD.delta(src, upd))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(mem + upd - src),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_saturating_apply_observes_memory():
+    """Paper §4.5: saturation thresholds must see the memory copy."""
+    m = mf.saturating_add(10.0)
+    mem = jnp.asarray([9.0, 3.0])
+    u = jnp.asarray([5.0, 5.0])
+    out = m.apply(mem, u)
+    np.testing.assert_allclose(np.asarray(out), [10.0, 8.0])
+
+
+def test_complex_mul_merge_roundtrip():
+    m = mf.COMPLEX_MUL
+    src = jnp.asarray([[1.0, 1.0]])     # 1 + i
+    upd = jnp.asarray([[0.0, 2.0]])     # 2i  (core multiplied by (1+i))
+    mem = jnp.asarray([[3.0, 0.0]])     # 3
+    u = m.delta(src, upd)               # upd / src = (1 + i)
+    out = m.apply(mem, u)               # 3 * (1+i) = 3+3i
+    np.testing.assert_allclose(np.asarray(out), [[3.0, 3.0]], atol=1e-6)
+
+
+def test_dropping_add_expected_fraction():
+    m = mf.dropping_add(0.5)
+    mem = jnp.zeros((10_000,))
+    u = jnp.ones((10_000,))
+    out = m.apply(mem, u, key=jax.random.key(0))
+    frac = float(out.mean())
+    assert 0.45 < frac < 0.55
+
+
+def test_int8_codec_roundtrip_error():
+    m = mf.int8_compressed_add()
+    u = jnp.linspace(-3, 3, 64)
+    dec = m.decode(m.encode(u))
+    assert float(jnp.max(jnp.abs(dec - u))) <= 3 / 127 + 1e-6
+
+
+def test_registry_mfrf():
+    reg = mf.default_registry()
+    assert reg.id_of("add") == 0
+    assert reg["add"] is mf.ADD
+    assert reg[reg.id_of("or")] is mf.BITWISE_OR
+    n = len(reg)
+    reg.merge_init(mf.ADD)  # idempotent
+    assert len(reg) == n
+    small = mf.MergeFunctionRegistry(capacity=1)
+    small.merge_init(mf.ADD)
+    with pytest.raises(ValueError):
+        small.merge_init(mf.MAX)

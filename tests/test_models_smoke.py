@@ -1,0 +1,131 @@
+"""Per-arch smoke tests: reduced configs, one forward/train step on CPU,
+asserting output shapes and finiteness (the brief's required smoke layer)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ShapeConfig,
+                                applicable_shapes, get_config,
+                                get_smoke_config)
+from repro.models.module import split_params
+from repro.models.registry import build_model
+
+TRAIN = ShapeConfig("smoke_train", 32, 2, "train")
+PREFILL = ShapeConfig("smoke_prefill", 32, 2, "prefill")
+
+
+def make_batch(model, cfg, shape_cfg, key=1):
+    specs = model.input_specs(shape_cfg)
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = jax.random.randint(jax.random.key(key), v.shape, 0,
+                                        cfg.vocab)
+        elif k == "position":
+            out[k] = jnp.asarray(shape_cfg.seq_len - 1, jnp.int32)
+        elif k == "caches":
+            out[k] = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), v,
+                is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+        else:
+            out[k] = jax.random.normal(jax.random.key(key + 1),
+                                       v.shape).astype(v.dtype)
+    return out
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    return {}
+
+
+def _params(arch, params_cache):
+    if arch not in params_cache:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params, _ = split_params(model.init(jax.random.key(0)))
+        params_cache[arch] = (cfg, model, params)
+    return params_cache[arch]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_finite(arch, params_cache):
+    cfg, model, params = _params(arch, params_cache)
+    batch = make_batch(model, cfg, TRAIN)
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(model.loss, has_aux=True))(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    assert 1.0 < float(loss) < 20.0          # ~ln(vocab) at init
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode(arch, params_cache):
+    cfg, model, params = _params(arch, params_cache)
+    batch = make_batch(model, cfg, PREFILL)
+    logits, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, PREFILL.seq_len))(params, batch)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, _ = jax.jit(model.decode_step)(
+        params, tok, caches, jnp.asarray(PREFILL.seq_len - 1, jnp.int32))
+    assert logits2.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_applicable_shapes_rules():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg)
+        assert "train_4k" in shapes
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in shapes      # sub-quadratic archs only
+        else:
+            assert "long_500k" not in shapes
+
+
+def test_full_configs_match_assignment():
+    """The exact architecture table from the brief."""
+    expect = {
+        "qwen1_5_0_5b": (24, 1024, 16, 16, 2816, 151936),
+        "granite_34b": (88, 6144, 48, 1, 24576, 49152),
+        "llama3_405b": (126, 16384, 128, 8, 53248, 128256),
+        "internlm2_1_8b": (24, 2048, 16, 8, 8192, 92544),
+        "llava_next_34b": (60, 7168, 56, 8, 20480, 64000),
+        "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+        "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+        "hymba_1_5b": (32, 1600, 25, 5, 5504, 32001),
+        "qwen3_moe_235b": (94, 4096, 64, 4, 0, 151936),
+        "kimi_k2_1t": (61, 7168, 64, 8, 18432, 163840),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab)
+        assert got == (L, d, h, kv, ff, v), (arch, got)
+    assert get_config("qwen3_moe_235b").n_experts == 128
+    assert get_config("qwen3_moe_235b").top_k == 8
+    assert get_config("kimi_k2_1t").n_experts == 384
+    assert get_config("kimi_k2_1t").ssm_state == 0
+    assert get_config("hymba_1_5b").ssm_state == 16
+
+
+def test_param_counts_sane():
+    """Analytic parameter counts land in the advertised ballpark."""
+    approx = {"qwen1_5_0_5b": (0.3e9, 0.9e9),
+              "granite_34b": (30e9, 40e9),
+              "llama3_405b": (380e9, 430e9),
+              "internlm2_1_8b": (1.5e9, 2.4e9),
+              "xlstm_125m": (0.08e9, 0.25e9),
+              "qwen3_moe_235b": (200e9, 260e9),
+              "kimi_k2_1t": (0.85e12, 1.2e12)}
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).n_params()
+        assert lo < n < hi, (arch, f"{n:.3e}")
+    # MoE active < total
+    for arch in ("qwen3_moe_235b", "kimi_k2_1t"):
+        cfg = get_config(arch)
+        assert cfg.n_active_params() < 0.2 * cfg.n_params()

@@ -1,0 +1,210 @@
+"""Optimizers, data pipeline, checkpointing, fault-tolerant driver."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.data.pipeline import (DataConfig, Prefetcher, batch_at,
+                                 data_config_for)
+from repro.optim import adafactor, adamw, constant, warmup_cosine
+from repro.runtime import DriverConfig, TrainDriver
+
+
+# ------------------------------------------------------------- optimizers
+
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor],
+                         ids=["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(make_opt):
+    opt = make_opt(constant(0.05))
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,)), "m": jnp.zeros((2, 3))}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["m"] ** 2)
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    step = jax.jit(opt.step)
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, stats = step(params, g, state)
+    assert float(loss(params)) < 0.2 * l0
+    assert np.isfinite(stats["grad_norm"])
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(constant(1e-2))
+    params = {"w": jnp.zeros((64, 32))}
+    st = opt.init(params)
+    nu = st.nu["w"]
+    assert set(nu) == {"row", "col"}
+    assert nu["row"].shape == (64,) and nu["col"].shape == (32,)
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) < 0.2
+
+
+# ------------------------------------------------------------------ data
+
+
+def test_data_determinism_and_range():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=4)
+    a, b = batch_at(cfg, 3), batch_at(cfg, 3)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 50
+    assert not np.array_equal(batch_at(cfg, 4)["tokens"], a["tokens"])
+
+
+def test_data_hosts_disjoint_and_labels_shifted():
+    c0 = DataConfig(vocab=100, seq_len=8, global_batch=8, host_id=0,
+                    num_hosts=2)
+    c1 = DataConfig(vocab=100, seq_len=8, global_batch=8, host_id=1,
+                    num_hosts=2)
+    b0, b1 = batch_at(c0, 0), batch_at(c1, 0)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    assert np.array_equal(b0["labels"][:, :-1], b0["tokens"][:, 1:])
+
+
+def test_prefetcher_resume_state():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=4)
+    pf = Prefetcher(cfg, start_step=5)
+    s1, b1 = pf.get()
+    s2, _ = pf.get()
+    pf.stop()
+    assert (s1, s2) == (5, 6)
+    pf2 = Prefetcher(cfg, start_step=pf.state())
+    s3, b3 = pf2.get()
+    pf2.stop()
+    assert s3 == 7
+    assert np.array_equal(b3["tokens"], batch_at(cfg, 7)["tokens"])
+
+
+def test_data_config_for_families():
+    from repro.configs.base import ShapeConfig, get_smoke_config
+    shape = ShapeConfig("t", 32, 4, "train")
+    enc = data_config_for(get_smoke_config("seamless_m4t_medium"), shape)
+    assert enc.with_frames and enc.frame_len > 0
+    vlm = data_config_for(get_smoke_config("llava_next_34b"), shape)
+    assert vlm.with_embeds
+    b = batch_at(vlm, 0)
+    assert "embeds" in b and "tokens" not in b
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_two_phase_commit_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "nested": [jnp.ones((2,)), jnp.zeros((1,), jnp.int32)]}
+        assert ckpt.latest_step(d) is None
+        ckpt.save(d, 10, tree, extras={"next_step": 10})
+        ckpt.save(d, 20, jax.tree.map(lambda x: x + 1, tree))
+        assert ckpt.latest_step(d) == 20
+        out, _ = ckpt.restore(d, tree, step=10)
+        np.testing.assert_allclose(np.asarray(out["a"]),
+                                   np.arange(6).reshape(2, 3))
+        out, _ = ckpt.restore(d, tree)   # latest
+        np.testing.assert_allclose(np.asarray(out["a"]),
+                                   np.arange(6).reshape(2, 3) + 1)
+        # a stale .tmp dir must never be visible
+        os.makedirs(os.path.join(d, "step_00000030.tmp"))
+        assert ckpt.latest_step(d) == 20
+
+
+def test_checkpoint_restore_resharded():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": jnp.arange(8.0)}
+        ckpt.save(d, 1, tree)
+        sh = {"w": NamedSharding(mesh, P("data"))}
+        out, _ = ckpt.restore_resharded(d, tree, sh)
+        assert out["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------- driver
+
+
+def _mk_driver(d, step_fn, ckpt_every=2):
+    return TrainDriver(
+        DriverConfig(ckpt_dir=d, ckpt_every=ckpt_every, max_retries=2,
+                     retry_backoff_s=0.0),
+        step_fn=step_fn,
+        batch_fn=lambda i: {"i": i})
+
+
+def test_driver_runs_and_checkpoints():
+    with tempfile.TemporaryDirectory() as d:
+        step = lambda s, b: ({"x": s["x"] + 1}, {"loss": 1.0 / (b["i"] + 1)})
+        drv = _mk_driver(d, step)
+        state, end = drv.run({"x": jnp.zeros(())}, 0, 6)
+        assert end == 6 and float(state["x"]) == 6
+        assert ckpt.latest_step(d) == 6
+
+
+def test_driver_nan_rollback_skips_batch():
+    with tempfile.TemporaryDirectory() as d:
+        def step(s, b):
+            loss = float("nan") if b["i"] == 3 else 0.5
+            return {"x": s["x"] + 1}, {"loss": loss}
+        drv = _mk_driver(d, step)
+        state, end = drv.run({"x": jnp.zeros(())}, 0, 6)
+        events = [e["event"] for e in drv.events]
+        assert "nan_rollback" in events
+        assert end == 6
+        # the poisoned step did not advance state beyond the rollback
+        assert float(state["x"]) == 5  # one batch skipped
+
+
+def test_driver_retries_transient_errors():
+    with tempfile.TemporaryDirectory() as d:
+        calls = {"n": 0}
+
+        def step(s, b):
+            calls["n"] += 1
+            if b["i"] == 1 and calls["n"] < 3:
+                raise RuntimeError("transient")
+            return s, {"loss": 1.0}
+        drv = _mk_driver(d, step)
+        _, end = drv.run({"x": jnp.zeros(())}, 0, 3)
+        assert end == 3
+        assert any(e["event"] == "step_error" for e in drv.events)
+
+
+def test_driver_straggler_detection():
+    import time as _t
+    with tempfile.TemporaryDirectory() as d:
+        def step(s, b):
+            if b["i"] == 12:
+                _t.sleep(0.25)
+            return s, {"loss": 1.0}
+        drv = _mk_driver(d, step, ckpt_every=100)
+        drv.run({"x": jnp.zeros(())}, 0, 14)
+        assert any(e["event"] == "straggler" for e in drv.events)
+
+
+def test_driver_preemption_saves_and_exits():
+    with tempfile.TemporaryDirectory() as d:
+        drv = _mk_driver(d, lambda s, b: (s, {"loss": 1.0}), ckpt_every=100)
+
+        orig_batch = drv.batch_fn
+        def batch_fn(i):
+            if i == 3:
+                drv._preempted = True    # what the SIGTERM handler does
+            return orig_batch(i)
+        drv.batch_fn = batch_fn
+        _, end = drv.run({"x": jnp.zeros(())}, 0, 10)
+        assert end == 4                  # stopped at the next boundary
+        assert ckpt.latest_step(d) == 4  # state saved before exit
