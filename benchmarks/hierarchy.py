@@ -1,0 +1,115 @@
+"""Flat vs hierarchical merge on the 2-pod mesh: wire bytes + simulated time.
+
+Compiles (never executes — the collectives are what we're costing) each merge
+strategy under ``shard_map`` over a flattened data-parallel axis shaped like
+the production pod mesh, then walks the partitioned HLO with
+``hlo_cost.analyze_hlo(intra_group_size=pod)`` to split collective bytes into
+intra-pod (ICI) and inter-pod (DCI) levels. Simulated time charges each level
+at its bandwidth:
+
+    t = intra_total / (chips * ICI_BW)  +  inter_total / DCI_TOTAL
+
+where DCI_TOTAL is the shared inter-pod pipe. The paper-level claim under
+test: the hierarchical engine's representative-only inter-group exchange
+cuts inter-pod bytes by the group-size factor vs the flat butterfly.
+
+Device counts: full = pod2x16x16 (512 forced host devices, group 256);
+``--quick`` = pod2x4x4 (32 devices, group 16). Like lm_tier, the multi-device
+part respawns in a subprocess so the parent keeps its single-device view.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+# Modeled hardware (mirrors repro.launch.hlo_analysis; DCI_TOTAL is the
+# aggregate inter-pod pipe rather than a per-chip share).
+ICI_BW = 50e9
+DCI_TOTAL = 800e9
+
+
+def bench_hierarchy(quick: bool = False) -> list[dict]:
+    """Run the flat-vs-hierarchical comparison in a forced-device subprocess."""
+    n_dev = 32 if quick else 512
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.abspath("src"), os.path.abspath("."),
+                    os.environ.get("PYTHONPATH", "")]))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.hierarchy", "--sub",
+         "quick" if quick else "full"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if out.returncode != 0:
+        return [{"bench": "hierarchy", "error": out.stderr[-600:]}]
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("{"):
+            rows.append(json.loads(line))
+    return rows
+
+
+def _sub_main(quick: bool) -> None:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import ccache
+    from repro.core import merge_functions as mf
+    from repro.launch import hlo_cost
+
+    # pod2x4x4 (quick) or pod2x16x16: the dp axis flattens (pod, data, model)
+    # rank-major, so one pod = the first `group` ranks — aligned groups.
+    chips = 32 if quick else 512
+    group = chips // 2
+    mesh_name = "pod2x4x4" if quick else "pod2x16x16"
+    mesh = jax.make_mesh((chips,), ("dp",))
+    n = (1 << 16) if quick else (1 << 20)  # per-device f32 update elements
+    sds = jax.ShapeDtypeStruct((chips, n), jnp.float32)
+    topo = ccache.MergeTopology(group_size=group)
+
+    cases = {
+        "flat_butterfly": lambda u: ccache.tree_merge(u, "dp", mf.ADD),
+        "hierarchical": lambda u: ccache.hierarchical_merge(
+            u, "dp", mf.ADD, topo),
+        "hierarchical_softpath": lambda u: ccache.hierarchical_merge(
+            u, "dp", mf.ADD, topo, force_tree=True),
+        "hierarchical_int8_inter": lambda u: ccache.hierarchical_merge(
+            u, "dp", mf.int8_compressed_add(), topo, compress=True),
+        "psum_fastpath": lambda u: ccache.reduce_update(u, "dp", mf.ADD),
+    }
+    for name, fn in cases.items():
+        f = jax.jit(shard_map(fn, mesh=mesh, in_specs=P("dp"),
+                              out_specs=P("dp"), check_rep=False))
+        hlo = f.lower(sds).compile().as_text()
+        walk = hlo_cost.analyze_hlo(hlo, intra_group_size=group)
+        intra = walk["wire_bytes_intra_total"]
+        inter = walk["wire_bytes_inter_total"]
+        sim_s = intra / (chips * ICI_BW) + inter / DCI_TOTAL
+        print(json.dumps({
+            "bench": "hierarchy", "mesh": mesh_name, "chips": chips,
+            "group_size": group, "case": name,
+            "update_mb_per_device": round(n * 4 / 1e6, 2),
+            "wire_bytes_per_device": walk["wire_bytes"],
+            "wire_bytes_intra_total": intra,
+            "wire_bytes_inter_total": inter,
+            "sim_time_us": round(sim_s * 1e6, 2),
+            "collectives": {k: v["count"]
+                            for k, v in walk["per_collective"].items()}}))
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sub", choices=["quick", "full"])
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    if a.sub:
+        _sub_main(a.sub == "quick")
+    else:
+        for r in bench_hierarchy(quick=a.quick):
+            print(json.dumps(r))

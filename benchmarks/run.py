@@ -25,7 +25,7 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=8,
                     help="hierarchy divisor vs Table 2 (1 = full size)")
     ap.add_argument("--only", default="",
-                    help="comma list: fig6,fig7,fig8,fig9,table3,lm")
+                    help="comma list: fig6,fig7,fig8,fig9,table3,lm,hier")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -74,6 +74,19 @@ def main() -> None:
 
     if want("fig8") and not args.quick:
         _emit(fig8_characterization(mc, quick=False))
+
+    if want("hier"):
+        from benchmarks.hierarchy import bench_hierarchy
+        rows = bench_hierarchy(quick=args.quick)
+        _emit(rows)
+        inter = {r.get("case"): r.get("wire_bytes_inter_total")
+                 for r in rows if "case" in r}
+        sim = {r.get("case"): r.get("sim_time_us") for r in rows if "case" in r}
+        if inter.get("flat_butterfly") and inter.get("hierarchical"):
+            summary["hier_inter_wire_reduction_x"] = round(
+                inter["flat_butterfly"] / inter["hierarchical"], 1)
+            summary["hier_sim_speedup_x"] = round(
+                sim["flat_butterfly"] / sim["hierarchical"], 2)
 
     if want("lm"):
         from benchmarks.lm_tier import (bench_cscatter, bench_grad_accum,

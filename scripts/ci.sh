@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full offline test suite plus the quick benchmark cells
+# (paper fig6 + the hierarchical-merge wire comparison).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --quick --only fig6,hier

@@ -2,11 +2,13 @@
 
 from repro.core.ccache import (
     CView,
+    MergeTopology,
     PendingUpdate,
     c_read,
     c_update,
     c_write,
     commit,
+    hierarchical_merge,
     merge,
     privatize,
     reduce_update,

@@ -16,6 +16,13 @@ Maps the paper's mechanism onto a TPU mesh (DESIGN.md §2):
 * ``soft_merge``   — defers reconciliation: the local delta is coalesced into
   a pending-update accumulator (``combine``), and the expensive cross-device
   merge happens once, later (merge-on-evict at the program level).
+* ``MergeTopology`` / ``hierarchical_merge`` — topology-aware two-level
+  merging: the device axis is split into groups of ``group_size`` devices;
+  intra-group merges ride the fused XLA collective (cheap ICI — the COUP
+  analogue), one representative per group runs the inter-group butterfly with
+  the software combine (and optional encode/decode wire compression), and the
+  result is broadcast back down the group. See docs/merge_topology.md for the
+  usage guide and the jax-0.4.37 compat policy.
 """
 
 from __future__ import annotations
@@ -28,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compat
 from repro.core.merge_functions import MergeFn, ADD
 
 PyTree = Any
@@ -77,7 +85,7 @@ def tree_merge(update: PyTree, axis_name, merge: MergeFn,
     all_gather + local fold. With ``compress`` and a merge that defines
     encode/decode, each round exchanges the compressed wire format.
     """
-    size = lax.axis_size(axis_name)
+    size = compat.axis_size(axis_name)
     if size & (size - 1) != 0:  # non-power-of-two fallback
         gathered = lax.all_gather(update, axis_name, axis=0, tiled=False)
         def _fold(x):
@@ -118,13 +126,235 @@ _XLA_REDUCERS = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Hierarchical (topology-aware) merging: intra-group fast path + inter-group
+# representative butterfly. See docs/merge_topology.md.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeTopology:
+    """Splits a device axis into (intra-group, inter-group) merge levels.
+
+    ``group_size`` devices form one group (e.g. one pod's worth of ranks on a
+    flattened data-parallel axis): groups are aligned, contiguous rank ranges
+    ``[g*group_size, (g+1)*group_size)``. Intra-group combines ride cheap
+    links (ICI) and use the fused XLA collective when the merge has a fixed
+    ``xla_reduce`` op; only rank 0 of each group (the representative) joins
+    the inter-group exchange over expensive links (DCI), after which the
+    result is broadcast back down the group.
+
+    ``axis_name`` optionally pins the topology to one named axis; when None
+    the axis passed at the merge call site is used. ``use_xla_intra=False``
+    forces the software ppermute path at the intra level too (testing /
+    arbitrary combines).
+    """
+
+    group_size: int
+    axis_name: Optional[str] = None
+    use_xla_intra: bool = True
+
+    def resolve_axis(self, axis_name):
+        return self.axis_name if self.axis_name is not None else axis_name
+
+    def validate(self, size: int) -> None:
+        if self.group_size < 1:
+            raise ValueError(f"group_size must be >= 1: {self.group_size}")
+        if size % self.group_size != 0:
+            raise ValueError(
+                f"axis size {size} not divisible by group_size "
+                f"{self.group_size}")
+
+    def groups(self, size: int) -> list[list[int]]:
+        g = self.group_size
+        return [list(range(i * g, (i + 1) * g)) for i in range(size // g)]
+
+
+def _intra_ring_perm(size: int, group: int) -> list[tuple[int, int]]:
+    """Each rank -> next lane in its group's ring (full permutation)."""
+    return [(i, (i // group) * group + ((i % group) + 1) % group)
+            for i in range(size)]
+
+
+def _rep_perms(size: int, group: int) -> list[list[tuple[int, int]]]:
+    """Inter-group exchange perms among the group representatives.
+
+    Only ranks ``g*group`` participate; everyone else gets an identity
+    self-pair (required under vmap, and free on hardware — a self-copy never
+    leaves the chip). Power-of-two group counts get a recursive-doubling
+    butterfly; otherwise a ring that circulates values ``n_groups - 1`` times.
+    """
+    n_groups = size // group
+    perms = []
+    if n_groups & (n_groups - 1) == 0:
+        step = 1
+        while step < n_groups:
+            pairs = {g * group: (g ^ step) * group for g in range(n_groups)}
+            perms.append([(i, pairs.get(i, i)) for i in range(size)])
+            step <<= 1
+    else:
+        ring = {g * group: ((g + 1) % n_groups) * group
+                for g in range(n_groups)}
+        perms.append([(i, ring.get(i, i)) for i in range(size)])
+    return perms
+
+
+def _tree_select(pred, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _intra_group_combine(update: PyTree, axis_name, merge: MergeFn,
+                         size: int, topology: "MergeTopology",
+                         force_tree: bool) -> PyTree:
+    """Level 1: every rank ends with its group's combined update."""
+    group = topology.group_size
+    if topology.use_xla_intra and not force_tree \
+            and merge.xla_reduce in _XLA_REDUCERS:
+        reducer = _XLA_REDUCERS[merge.xla_reduce]
+        try:
+            return jax.tree.map(
+                functools.partial(reducer, axis_name=axis_name,
+                                  axis_index_groups=topology.groups(size)),
+                update)
+        except NotImplementedError:
+            pass  # vmap collectives reject axis_index_groups; software path.
+    if group & (group - 1) == 0:
+        # Recursive doubling with steps < group stays inside the aligned
+        # group (i ^ step keeps the high bits), so the flat butterfly perm
+        # doubles as the intra-group one.
+        u = update
+        step = 1
+        while step < group:
+            other = lax.ppermute(u, axis_name,
+                                 perm=_butterfly_perms(size, step))
+            u = merge.tree_combine(u, other)
+            step <<= 1
+        return u
+    # Any group size: circulate values around the group ring, folding as
+    # they pass — group-1 rounds, each rank sees every group member once.
+    perm = _intra_ring_perm(size, group)
+    recv = update
+    acc = update
+    for _ in range(group - 1):
+        recv = lax.ppermute(recv, axis_name, perm=perm)
+        acc = merge.tree_combine(acc, recv)
+    return acc
+
+
+def _inter_group_combine(update: PyTree, axis_name, merge: MergeFn,
+                         size: int, group: int, is_rep,
+                         compress: bool) -> PyTree:
+    """Level 2: representatives exchange group aggregates across groups.
+
+    Non-representatives are carried through untouched (their ppermute legs
+    are identity self-pairs); ``compress`` puts the merge's encode/decode
+    wire format on these expensive inter-group rounds only.
+    """
+    n_groups = size // group
+    perms = _rep_perms(size, group)
+    butterfly = n_groups & (n_groups - 1) == 0
+
+    if compress and merge.encode is not None:
+        leaves, treedef = jax.tree.flatten(update)
+        if butterfly:
+            for perm in perms:
+                wire = [merge.encode(l) for l in leaves]
+                other = lax.ppermute(wire, axis_name, perm=perm)
+                combined = [merge.combine(merge.decode(w), merge.decode(o))
+                            for w, o in zip(wire, other)]
+                leaves = [jnp.where(is_rep, c, l)
+                          for c, l in zip(combined, leaves)]
+        else:
+            # Ring: circulate each rep's original (encoded) contribution and
+            # fold it in as it arrives; own wire is decoded too so all ranks
+            # fold identically-quantized values.
+            wire = [merge.encode(l) for l in leaves]
+            acc = [merge.decode(w) for w in wire]
+            for _ in range(n_groups - 1):
+                wire = lax.ppermute(wire, axis_name, perm=perms[0])
+                acc = [merge.combine(a, merge.decode(w))
+                       for a, w in zip(acc, wire)]
+            leaves = [jnp.where(is_rep, a, l) for a, l in zip(acc, leaves)]
+        return jax.tree.unflatten(treedef, leaves)
+
+    u = update
+    if butterfly:
+        for perm in perms:
+            other = lax.ppermute(u, axis_name, perm=perm)
+            u = _tree_select(is_rep, merge.tree_combine(u, other), u)
+    else:
+        recv = u
+        for _ in range(n_groups - 1):
+            recv = lax.ppermute(recv, axis_name, perm=perms[0])
+            u = _tree_select(is_rep, merge.tree_combine(u, recv), u)
+    return u
+
+
+def _group_broadcast(update: PyTree, axis_name, size: int, group: int,
+                     lane) -> PyTree:
+    """Level 3: binomial broadcast of the representative's value down its
+    group — ceil(log2(group)) swap rounds, all intra-group traffic."""
+    u = update
+    k = 1
+    while k < group:
+        perm = []
+        for i in range(size):
+            l = i % group
+            partner = l ^ k
+            if l < 2 * k and partner < group:
+                perm.append((i, (i // group) * group + partner))
+            else:
+                perm.append((i, i))
+        recv = lax.ppermute(u, axis_name, perm=perm)
+        u = _tree_select(lane < k, u, recv)
+        k <<= 1
+    return u
+
+
+def hierarchical_merge(update: PyTree, axis_name, merge: MergeFn,
+                       topology: MergeTopology, compress: bool = False,
+                       force_tree: bool = False) -> PyTree:
+    """Two-level all-reduce of ``update`` with an arbitrary combine.
+
+    Equivalent to ``tree_merge`` (every rank ends with the full combination)
+    but wire-aware: with P ranks in groups of G, the expensive inter-group
+    level moves P/G contributions instead of P — the flat butterfly's
+    cross-group round costs P messages where this costs P/G.
+    """
+    axis_name = topology.resolve_axis(axis_name)
+    size = compat.axis_size(axis_name)
+    topology.validate(size)
+    group = topology.group_size
+    if group <= 1 or size == 1:
+        # Degenerate: every rank is its own group -> flat dispatch.
+        return reduce_update(update, axis_name, merge, compress=compress,
+                             force_tree=force_tree)
+
+    u = _intra_group_combine(update, axis_name, merge, size, topology,
+                             force_tree)
+    if size // group == 1:
+        return u
+    rank = lax.axis_index(axis_name)
+    lane = rank % group
+    is_rep = lane == 0
+    u = _inter_group_combine(u, axis_name, merge, size, group, is_rep,
+                             compress)
+    return _group_broadcast(u, axis_name, size, group, lane)
+
+
 def reduce_update(update: PyTree, axis_name, merge: MergeFn,
-                  compress: bool = False, force_tree: bool = False) -> PyTree:
+                  compress: bool = False, force_tree: bool = False,
+                  topology: Optional["MergeTopology"] = None) -> PyTree:
     """Cross-device combination of per-device updates.
 
     COUP fast path (fixed op fused into the collective) when available and not
-    overridden; CCache flexible path (tree_merge) otherwise.
+    overridden; CCache flexible path (tree_merge) otherwise. A ``topology``
+    with ``group_size > 1`` routes through the two-level hierarchical engine
+    (``hierarchical_merge``) instead of the flat paths.
     """
+    if topology is not None and topology.group_size > 1:
+        return hierarchical_merge(update, axis_name, merge, topology,
+                                  compress=compress, force_tree=force_tree)
     if compress and merge.encode is not None:
         return tree_merge(update, axis_name, merge, compress=True)
     if not force_tree and merge.xla_reduce in _XLA_REDUCERS:
@@ -141,7 +371,8 @@ def reduce_update(update: PyTree, axis_name, merge: MergeFn,
 
 def merge(view: CView, mem: PyTree, axis_name, merge_fn: MergeFn,
           key: Optional[jax.Array] = None, compress: bool = False,
-          force_tree: bool = False) -> PyTree:
+          force_tree: bool = False,
+          topology: Optional[MergeTopology] = None) -> PyTree:
     """Full CCache merge: delta -> cross-device combine -> apply to memory.
 
     Every rank computes the identical combined update, so applying it to the
@@ -151,7 +382,7 @@ def merge(view: CView, mem: PyTree, axis_name, merge_fn: MergeFn,
     """
     u = merge_fn.tree_delta(view.src, view.upd)
     u = reduce_update(u, axis_name, merge_fn, compress=compress,
-                      force_tree=force_tree)
+                      force_tree=force_tree, topology=topology)
     return merge_fn.tree_apply(mem, u, key=key)
 
 
@@ -185,7 +416,9 @@ def soft_merge(view: CView, pending: Optional[PendingUpdate],
 
 
 def commit(pending: PendingUpdate, mem: PyTree, axis_name, merge_fn: MergeFn,
-           key: Optional[jax.Array] = None, compress: bool = False) -> PyTree:
+           key: Optional[jax.Array] = None, compress: bool = False,
+           topology: Optional[MergeTopology] = None) -> PyTree:
     """Apply a deferred pending update to memory (the eviction-time merge)."""
-    u = reduce_update(pending.update, axis_name, merge_fn, compress=compress)
+    u = reduce_update(pending.update, axis_name, merge_fn, compress=compress,
+                      topology=topology)
     return merge_fn.tree_apply(mem, u, key=key)

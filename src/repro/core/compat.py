@@ -1,0 +1,32 @@
+"""Compatibility shims for the pinned jax (0.4.37) — see docs/merge_topology.md.
+
+Policy: the repo targets the jax version baked into the container. Anything
+newer jax exposes but 0.4.37 lacks gets a semantically-equivalent shim here,
+and call sites import from ``repro.core.compat`` instead of feature-detecting
+inline. Shims prefer the real API when present so upgrading jax is a no-op.
+"""
+
+from __future__ import annotations
+
+from jax import lax
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mapped axis (vmap / shard_map / pmap).
+
+    ``lax.axis_size`` only exists in jax >= 0.4.38; on older jax the
+    documented equivalent is ``psum`` of the literal 1, which constant-folds
+    to a Python int at trace time (no collective is emitted).
+    """
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params: ``CompilerParams`` was named
+    ``TPUCompilerParams`` in jax 0.4.x."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import ccache
+from repro.core import ccache, compat
 from repro.core.merge_functions import ADD, MergeFn
 
 PyTree = Any
@@ -74,14 +74,19 @@ def merge_gradients(
     merge_fn: MergeFn = ADD,
     compress: bool = False,
     mean: bool = True,
+    topology: Optional[ccache.MergeTopology] = None,
 ) -> PyTree:
     """Explicit cross-device gradient merge (inside shard_map).
 
     ``compress=True`` with a merge defining encode/decode exchanges the int8
     wire format in every butterfly round (≈4x fewer collective bytes).
+    ``topology`` routes through the hierarchical engine: intra-group fused
+    reduction on cheap links, representative-only exchange across groups
+    (where compression, if any, is applied).
     """
-    merged = ccache.reduce_update(grads, axis_name, merge_fn, compress=compress)
+    merged = ccache.reduce_update(grads, axis_name, merge_fn,
+                                  compress=compress, topology=topology)
     if mean and merge_fn.name in ("add", "int8_add"):
-        n = lax.axis_size(axis_name)
+        n = compat.axis_size(axis_name)
         merged = jax.tree.map(lambda g: g / n, merged)
     return merged

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
+
 MERGE_KINDS = ("add", "sat_add", "max", "or")
 
 
@@ -151,7 +153,7 @@ def cscatter(table: jax.Array, ids: jax.Array, vals: jax.Array, *,
             pltpu.VMEM((block_rows, d), acc_dtype),           # update copy
             pltpu.VMEM((block_rows, 1), jnp.bool_),           # dirty bits
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(ids.astype(jnp.int32), vals, table)

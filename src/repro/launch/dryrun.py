@@ -35,8 +35,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     from repro.configs.base import SHAPES, ShapeConfig, get_config, \
         get_smoke_config
     from repro.launch import hlo_cost
-    from repro.launch.hlo_analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
-                                           roofline_terms)
+    from repro.launch.hlo_analysis import (DCI_BW, HBM_BW, ICI_BW,
+                                           PEAK_FLOPS, roofline_terms)
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import plan_for
 
@@ -84,7 +84,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
         mem["fits_16gb_hbm"] = bool(live < 16 * 1024**3)
         rec["memory"] = mem
 
+        # jax 0.4.37 returns a list of per-program dicts; newer jax returns
+        # the dict directly. Normalize to a single dict either way.
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
         print("cost_analysis flops:", ca.get("flops"),
               "bytes:", ca.get("bytes accessed"))
         rec["cost_analysis_raw"] = {
@@ -97,13 +101,21 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
         if dump_hlo:
             with open(dump_hlo, "w") as f:
                 f.write(hlo)
-        walk = hlo_cost.analyze_hlo(hlo)
+        # Per-level wire accounting on hierarchical meshes: one pod's chips
+        # form a device-group; bytes crossing pods ride the (scarcer) DCI.
+        pod_size = chips // mesh.shape.get("pod", 1)
+        walk = hlo_cost.analyze_hlo(
+            hlo, intra_group_size=pod_size if multi_pod else None)
         rec["hlo_walk"] = {k: walk[k] for k in
                            ("flops", "hbm_bytes", "wire_bytes", "trip_counts")}
+        if multi_pod:
+            rec["hlo_walk"]["wire_bytes_intra"] = walk["wire_bytes_intra"]
+            rec["hlo_walk"]["wire_bytes_inter"] = walk["wire_bytes_inter"]
         rec["per_collective"] = walk["per_collective"]
 
         terms = roofline_terms(walk["flops"], walk["hbm_bytes"],
-                               walk["wire_bytes"])
+                               walk["wire_bytes"],
+                               walk.get("wire_bytes_inter", 0.0))
         rec["roofline"] = terms
 
         # MODEL_FLOPS: useful-work basis. 6ND train, 2ND forward-only
@@ -123,7 +135,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
         rec["useful_flops_ratio"] = (model_flops / hlo_total_flops
                                      if hlo_total_flops else None)
         rec["hw"] = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
-                     "ici_bw": ICI_BW}
+                     "ici_bw": ICI_BW, "dci_bw": DCI_BW}
         rec["status"] = "ok"
         print(f"[{arch} x {shape} x {mesh_name}] "
               f"compute={terms['compute_s']:.4f}s "

@@ -10,14 +10,23 @@ from __future__ import annotations
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per ICI link (per-chip wire budget)
+DCI_BW = 12.5e9              # bytes/s per chip of inter-pod DCI budget
+                             # (the data-center interconnect between pods is
+                             # ~4x scarcer per chip than intra-pod ICI)
 
 
 def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
-                   wire_bytes_per_device: float) -> dict:
+                   wire_bytes_per_device: float,
+                   wire_bytes_inter_per_device: float = 0.0) -> dict:
+    """Three-term roofline; ``wire_bytes_inter_per_device`` (a subset of
+    ``wire_bytes_per_device``) is charged at DCI instead of ICI bandwidth —
+    the hierarchy-aware collective term for multi-pod meshes."""
+    wire_intra = max(0.0, wire_bytes_per_device - wire_bytes_inter_per_device)
     terms = {
         "compute_s": flops_per_device / PEAK_FLOPS,
         "memory_s": hbm_bytes_per_device / HBM_BW,
-        "collective_s": wire_bytes_per_device / ICI_BW,
+        "collective_s": (wire_intra / ICI_BW
+                         + wire_bytes_inter_per_device / DCI_BW),
     }
     dom = max(terms, key=terms.get)
     bound = terms[dom]

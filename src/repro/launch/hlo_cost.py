@@ -15,6 +15,15 @@ multipliers by walking the HLO call graph from ENTRY:
     reduce-scatter (g-1) x B_result | all-to-all (g-1)/g x B
     collective-permute 1 x B
 All quantities are per-device (the module is the per-device SPMD program).
+
+With ``intra_group_size`` (devices per hierarchy group, e.g. 256 = one pod
+of the pod2x16x16 mesh), collective traffic is additionally classified by
+*level*: bytes whose source and destination share a device-group are intra
+(cheap ICI); bytes crossing a group boundary are inter (expensive DCI).
+collective-permutes classify per source->target pair (self-pairs are free);
+replica-group collectives use the ring model — links between consecutive
+sorted members, crossing links are inter. Level totals are machine-wide;
+``wire_bytes_intra``/``wire_bytes_inter`` are per-device averages.
 """
 
 from __future__ import annotations
@@ -160,6 +169,7 @@ def parse_module(text: str) -> tuple[dict[str, Computation], Optional[str]]:
     return comps, entry
 
 
+_NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
 _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
@@ -167,6 +177,12 @@ _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_FULL_RE = re.compile(
+    r"replica_groups=\{((?:\{[0-9, ]*\}, ?)*\{[0-9, ]*\})\}")
+_GROUPS_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+, ?\d+\},? ?)*)\}")
+_PAIR_RE = re.compile(r"\{(\d+), ?(\d+)\}")
 _CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 
@@ -193,19 +209,114 @@ def _wire_bytes(op: str, rbytes: int, g: int) -> float:
     return float(rbytes)  # collective-permute
 
 
+def _parse_replica_groups(attrs: str) -> Optional[list[list[int]]]:
+    """All replica groups as explicit device-id lists (None if unknown)."""
+    m = _GROUPS_FULL_RE.search(attrs)
+    if m:
+        return [[int(x) for x in grp.split(",") if x.strip()]
+                for grp in re.findall(r"\{([0-9, ]*)\}", m.group(1))]
+    m = _GROUPS_IOTA_FULL_RE.search(attrs)
+    if m:  # iota_replica_group_list: reshape/transpose of arange(prod(dims))
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",") if d.strip()]
+        n = 1
+        for d in dims:
+            n *= d
+        if n != n_groups * group_size:
+            return None
+        ids = list(range(n))
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",") if p.strip()]
+            strides = [0] * len(dims)
+            acc = 1
+            for i in range(len(dims) - 1, -1, -1):
+                strides[i] = acc
+                acc *= dims[i]
+            pdims = [dims[p] for p in perm]
+            pstrides = [strides[p] for p in perm]
+            ids = []
+            idx = [0] * len(pdims)
+            for _ in range(n):
+                ids.append(sum(i * s for i, s in zip(idx, pstrides)))
+                for ax in range(len(pdims) - 1, -1, -1):
+                    idx[ax] += 1
+                    if idx[ax] < pdims[ax]:
+                        break
+                    idx[ax] = 0
+        return [ids[g * group_size:(g + 1) * group_size]
+                for g in range(n_groups)]
+    return None
+
+
+def _ring_inter_fraction(group: list[int], gsize: int) -> float:
+    """Fraction of a replica group's ring links that cross device-groups."""
+    if len(group) < 2:
+        return 0.0
+    ring = sorted(group)
+    links = list(zip(ring, ring[1:] + ring[:1]))
+    crossing = sum(1 for a, b in links if a // gsize != b // gsize)
+    return crossing / len(links)
+
+
+def _classify_collective(instr: Instr, rbytes: int,
+                         intra_group_size: int,
+                         num_partitions: int) -> tuple[float, float]:
+    """Machine-wide (intra_bytes, inter_bytes) for one collective."""
+    base = instr.op.replace("-start", "")
+    if base == "collective-permute":
+        m = _PAIRS_RE.search(instr.attrs)
+        if not m:
+            return float(rbytes * num_partitions), 0.0
+        intra = inter = 0.0
+        for s, t in _PAIR_RE.findall(m.group(1)):
+            s, t = int(s), int(t)
+            if s == t:
+                continue  # self-copy never leaves the chip
+            if s // intra_group_size == t // intra_group_size:
+                intra += rbytes
+            else:
+                inter += rbytes
+        return intra, inter
+    groups = _parse_replica_groups(instr.attrs)
+    if groups is None:
+        groups = [list(range(num_partitions))]
+    intra = inter = 0.0
+    for grp in groups:
+        g = max(1, len(grp))
+        total = g * _wire_bytes(instr.op, rbytes, g)
+        frac = _ring_inter_fraction(grp, intra_group_size)
+        inter += total * frac
+        intra += total * (1.0 - frac)
+    return intra, inter
+
+
 class CostResult:
-    def __init__(self):
+    def __init__(self, intra_group_size: Optional[int] = None,
+                 num_partitions: int = 1):
         self.flops = 0.0
         self.hbm_bytes = 0.0
         self.wire_bytes = 0.0
         self.per_collective: dict[str, dict] = {}
         self.trip_counts: list[int] = []
+        self.intra_group_size = intra_group_size
+        self.num_partitions = num_partitions
+        self.wire_bytes_intra_total = 0.0
+        self.wire_bytes_inter_total = 0.0
 
     def as_dict(self) -> dict:
-        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
-                "wire_bytes": self.wire_bytes,
-                "per_collective": self.per_collective,
-                "trip_counts": sorted(set(self.trip_counts), reverse=True)}
+        out = {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+               "wire_bytes": self.wire_bytes,
+               "per_collective": self.per_collective,
+               "trip_counts": sorted(set(self.trip_counts), reverse=True),
+               "num_partitions": self.num_partitions}
+        if self.intra_group_size is not None:
+            n = max(1, self.num_partitions)
+            out["intra_group_size"] = self.intra_group_size
+            out["wire_bytes_intra_total"] = self.wire_bytes_intra_total
+            out["wire_bytes_inter_total"] = self.wire_bytes_inter_total
+            out["wire_bytes_intra"] = self.wire_bytes_intra_total / n
+            out["wire_bytes_inter"] = self.wire_bytes_inter_total / n
+        return out
 
 
 def _instr_memory_bytes(instr: Instr, comp: Computation) -> float:
@@ -376,14 +487,27 @@ def _visit(comp: Computation, comps: dict[str, Computation], mult: float,
             d["result_bytes"] += mult * rbytes
             d["wire_bytes"] += mult * wire
             res.wire_bytes += mult * wire
+            if res.intra_group_size is not None:
+                intra, inter = _classify_collective(
+                    instr, rbytes, res.intra_group_size, res.num_partitions)
+                d["wire_bytes_intra_total"] = \
+                    d.get("wire_bytes_intra_total", 0.0) + mult * intra
+                d["wire_bytes_inter_total"] = \
+                    d.get("wire_bytes_inter_total", 0.0) + mult * inter
+                res.wire_bytes_intra_total += mult * intra
+                res.wire_bytes_inter_total += mult * inter
 
         if count_memory and op not in _SKIP_MEMORY:
             res.hbm_bytes += mult * _instr_memory_bytes(instr, comp)
 
 
-def analyze_hlo(text: str) -> dict:
+def analyze_hlo(text: str, intra_group_size: Optional[int] = None) -> dict:
+    """Walk the HLO module; with ``intra_group_size`` also classify
+    collective bytes into intra-/inter-group hierarchy levels."""
     comps, entry = parse_module(text)
-    res = CostResult()
+    m = _NUM_PARTITIONS_RE.search(text)
+    res = CostResult(intra_group_size=intra_group_size,
+                     num_partitions=int(m.group(1)) if m else 1)
     if entry is not None:
         _visit(comps[entry], comps, 1.0, res, count_memory=True)
     return res.as_dict()

@@ -11,9 +11,12 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.grad_merge import microbatched_value_and_grad
+from repro.core.ccache import MergeTopology
+from repro.core.grad_merge import merge_gradients, microbatched_value_and_grad
+from repro.core.merge_functions import ADD, int8_compressed_add
 from repro.models.module import split_params
 from repro.models.registry import build_model
 from repro.optim import make_optimizer, warmup_cosine
@@ -92,17 +95,58 @@ def opt_state_axes(opt_specs: OptState, param_axes: PyTree) -> OptState:
 # ---------------------------------------------------------------------------
 
 
-def make_train_step(model, cfg, optimizer, num_microbatches: int = 1):
+def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
+                    mesh: Optional[Mesh] = None,
+                    merge_topology: Optional[MergeTopology] = None,
+                    merge_compress: bool = False):
+    """Build the train step.
+
+    Default: implicit gradient reduction — XLA inserts the collectives the
+    output shardings demand. With ``merge_topology`` (and a ``mesh``), the
+    gradient merge is *explicit*: per-shard grads are computed under
+    ``shard_map`` over the topology's axis and reconciled by the CCache
+    hierarchical engine (intra-group fused collective, representative-only
+    inter-group exchange, optionally compressed). Params must be replicated
+    on that axis — this is the data-parallel/host path, not the FSDP path.
+    """
+
     def loss_fn(params, batch):
         return model.loss(params, batch)[0]
 
+    def grads_of(params, batch):
+        if num_microbatches > 1:
+            return microbatched_value_and_grad(
+                loss_fn, num_microbatches)(params, batch)
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    if merge_topology is not None:
+        assert mesh is not None, "explicit merge needs the mesh"
+        from jax.experimental.shard_map import shard_map
+
+        axis = merge_topology.axis_name or "data"
+        grad_merge_fn = int8_compressed_add() if merge_compress else ADD
+
+        def sharded_grads(params, batch):
+            def shard_fn(params, batch):
+                loss, grads = grads_of(params, batch)
+                grads = merge_gradients(grads, axis,
+                                        merge_fn=grad_merge_fn,
+                                        topology=merge_topology,
+                                        compress=merge_compress)
+                return lax.pmean(loss, axis), grads
+
+            return shard_map(shard_fn, mesh=mesh,
+                             in_specs=(P(), P(axis)),
+                             out_specs=(P(), P()),
+                             check_rep=False)(params, batch)
+
+        grad_step = sharded_grads
+    else:
+        grad_step = grads_of
+
     def train_step(state, batch):
         params = state["params"]
-        if num_microbatches > 1:
-            mb = microbatched_value_and_grad(loss_fn, num_microbatches)
-            loss, grads = mb(params, batch)
-        else:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss, grads = grad_step(params, batch)
         params, opt_state, stats = optimizer.step(params, grads, state["opt"])
         return ({"params": params, "opt": opt_state},
                 {"loss": loss, **stats})

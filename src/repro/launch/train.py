@@ -39,6 +39,13 @@ def main() -> None:
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=256)
     p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--merge-group-size", type=int, default=0,
+                   help="explicit hierarchical gradient merge: devices per "
+                        "intra-group level on the data axis (0 = implicit "
+                        "XLA reduction)")
+    p.add_argument("--merge-compress", action="store_true",
+                   help="int8-compress the inter-group gradient exchange "
+                        "(requires --merge-group-size)")
     p.add_argument("--lr", type=float, default=3e-4)
     p.add_argument("--warmup", type=int, default=20)
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -59,7 +66,21 @@ def main() -> None:
 
     optimizer = make_optimizer(
         cfg, warmup_cosine(args.lr, args.warmup, args.steps))
-    step_fn = make_train_step(model, cfg, optimizer, args.microbatches)
+    topology = None
+    if args.merge_compress and not args.merge_group_size:
+        raise SystemExit("--merge-compress requires --merge-group-size")
+    if args.merge_group_size:
+        from repro.core.ccache import MergeTopology
+        dp = mesh.shape.get("data", 1)
+        if dp % args.merge_group_size != 0:
+            raise SystemExit(
+                f"--merge-group-size {args.merge_group_size} does not divide "
+                f"the data axis ({dp} devices)")
+        topology = MergeTopology(group_size=args.merge_group_size,
+                                 axis_name="data")
+    step_fn = make_train_step(model, cfg, optimizer, args.microbatches,
+                              mesh=mesh, merge_topology=topology,
+                              merge_compress=args.merge_compress)
 
     with mesh, sharding_rules(mesh, rules):
         params, _ = split_params(model.init(jax.random.key(args.seed)))

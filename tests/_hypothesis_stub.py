@@ -1,0 +1,138 @@
+"""Offline fallback for ``hypothesis``: deterministic fixed-sample property runs.
+
+The container has no network, so ``hypothesis`` may be absent. Test modules do
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, strategies as st
+
+and get the same decorator surface running each property over a fixed,
+deterministically-seeded sample set (first example = minimal values, the rest
+pseudo-random from a per-test stable seed). Real hypothesis is used whenever
+it is installed; this stub trades shrinking/coverage for zero dependencies.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import zlib
+
+_DEFAULT_EXAMPLES = 10
+_MAX_EXAMPLES_CAP = 12  # keep offline CI latency close to hypothesis defaults
+
+
+class _Strategy:
+    """A draw rule: ``sample(rng, minimal)`` -> one value."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def sample(self, rng, minimal=False):
+        return self._fn(rng, minimal)
+
+
+class strategies:
+    """Subset of ``hypothesis.strategies`` used by this repo's tests."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2**31 - 1):
+        return _Strategy(lambda rng, minimal:
+                         min_value if minimal else rng.randint(min_value,
+                                                               max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False, width=64,
+               allow_infinity=False):
+        def draw(rng, minimal):
+            if minimal:
+                return float(min_value)
+            return rng.uniform(float(min_value), float(max_value))
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng, minimal:
+                         False if minimal else bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng, minimal:
+                         seq[0] if minimal else rng.choice(seq))
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng, minimal: value)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng, minimal):
+            n = min_size if minimal else rng.randint(min_size, max_size)
+            return [elements.sample(rng, minimal) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng, minimal:
+                         tuple(s.sample(rng, minimal) for s in strats))
+
+    @staticmethod
+    def one_of(*strats):
+        return _Strategy(lambda rng, minimal:
+                         strats[0].sample(rng, minimal) if minimal
+                         else rng.choice(strats).sample(rng, minimal))
+
+
+st = strategies
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Records max_examples for a later ``given``; other knobs are no-ops."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test over a deterministic sample set of the strategies.
+
+    The wrapper hides the drawn parameter names from pytest (so fixtures
+    aren't looked up for them) while passing through parametrize/fixture
+    arguments untouched.
+    """
+
+    def deco(fn):
+        n_examples = min(getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES),
+                         _MAX_EXAMPLES_CAP)
+        seed_base = zlib.crc32(
+            (fn.__module__ + "." + fn.__qualname__).encode())
+
+        def wrapper(*args, **kwargs):
+            for i in range(n_examples):
+                rng = random.Random(seed_base + i)
+                drawn = {name: strat.sample(rng, minimal=(i == 0))
+                         for name, strat in sorted(strategy_kwargs.items())}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on stub example {i}: {drawn!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        # Signature minus the drawn params, so pytest only sees real args.
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return deco
