@@ -3,19 +3,28 @@
 Compiles (never executes — the collectives are what we're costing) each merge
 strategy under ``shard_map`` over a flattened data-parallel axis shaped like
 the production pod mesh, then walks the partitioned HLO with
-``hlo_cost.analyze_hlo(intra_group_size=pod)`` to split collective bytes into
-intra-pod (ICI) and inter-pod (DCI) levels. Simulated time charges each level
-at its bandwidth:
+``hlo_cost.analyze_hlo(level_sizes=...)`` to split collective bytes into the
+per-level hierarchy vector (chip / host / pod). Simulated time charges each
+level at its bandwidth:
 
-    t = intra_total / (chips * ICI_BW)  +  inter_total / DCI_TOTAL
+    t = chip / (chips * ICI_BW) + host / (chips * ICI_BW/2) + pod / DCI_TOTAL
 
-where DCI_TOTAL is the shared inter-pod pipe. The paper-level claim under
-test: the hierarchical engine's representative-only inter-group exchange
-cuts inter-pod bytes by the group-size factor vs the flat butterfly.
+where DCI_TOTAL is the shared inter-pod pipe. Claims under test:
 
-Device counts: full = pod2x16x16 (512 forced host devices, group 256);
-``--quick`` = pod2x4x4 (32 devices, group 16). Like lm_tier, the multi-device
-part respawns in a subprocess so the parent keeps its single-device view.
+* two-level (PR-1): the representative-only inter-group exchange cuts
+  inter-pod bytes by the group-size factor vs the flat butterfly;
+* three-level MergePlan (chip:16,host:16,pod:2 on the full mesh): the same
+  per-level, with the top level ≥100x cheaper than the flat butterfly's,
+  and the lane-parallel exchange moving identical bytes over stride-times
+  more links;
+* merge-on-evict: a plan with ``pod:...:defer`` pays the pod level once per
+  K-step commit — the per-step amortized top-level bytes drop ~K-fold
+  (paper's mergeable bit, level 2).
+
+Device counts: full = pod2x16x16 (512 forced host devices, chip:16,host:16,
+pod:2); ``--quick`` = pod2x4x4 (32 devices, chip:4,host:4,pod:2). Like
+lm_tier, the multi-device part respawns in a subprocess so the parent keeps
+its single-device view.
 """
 
 from __future__ import annotations
@@ -28,7 +37,9 @@ import sys
 # Modeled hardware (mirrors repro.launch.hlo_analysis; DCI_TOTAL is the
 # aggregate inter-pod pipe rather than a per-chip share).
 ICI_BW = 50e9
+HOST_BW = 25e9
 DCI_TOTAL = 800e9
+DEFER_K = 8
 
 
 def bench_hierarchy(quick: bool = False) -> list[dict]:
@@ -52,6 +63,11 @@ def bench_hierarchy(quick: bool = False) -> list[dict]:
     return rows
 
 
+def _sim_time_s(by_level_total: list[float], chips: int) -> float:
+    bws = [chips * ICI_BW, chips * HOST_BW, DCI_TOTAL]
+    return sum(b / bw for b, bw in zip(by_level_total, bws))
+
+
 def _sub_main(quick: bool) -> None:
     import jax
     import jax.numpy as jnp
@@ -60,17 +76,55 @@ def _sub_main(quick: bool) -> None:
 
     from repro.core import ccache
     from repro.core import merge_functions as mf
+    from repro.core.merge_plan import MergePlan
     from repro.launch import hlo_cost
 
     # pod2x4x4 (quick) or pod2x16x16: the dp axis flattens (pod, data, model)
-    # rank-major, so one pod = the first `group` ranks — aligned groups.
+    # rank-major, so one pod = the first `group` ranks — aligned groups, and
+    # the 3-level plan nests chip blocks inside host blocks inside pods.
     chips = 32 if quick else 512
     group = chips // 2
+    chip = 4 if quick else 16
+    host = group // chip
     mesh_name = "pod2x4x4" if quick else "pod2x16x16"
+    level_sizes = (chip, host, 2)
+    level_names = ("chip", "host", "pod")
     mesh = jax.make_mesh((chips,), ("dp",))
     n = (1 << 16) if quick else (1 << 20)  # per-device f32 update elements
     sds = jax.ShapeDtypeStruct((chips, n), jnp.float32)
     topo = ccache.MergeTopology(group_size=group)
+    spec3 = f"chip:{chip},host:{host},pod:2"
+    plan3 = MergePlan.parse(spec3)
+    plan3_lane = MergePlan.parse(spec3, lane_parallel=True)
+    plan3_defer = MergePlan.parse(spec3.replace("pod:2", "pod:2:defer"),
+                                  lane_parallel=True)
+
+    def _walk(fn, in_specs=P("dp"), args=(sds,)):
+        f = jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=P("dp"), check_rep=False))
+        hlo = f.lower(*args).compile().as_text()
+        return hlo_cost.analyze_hlo(hlo, intra_group_size=group,
+                                    level_sizes=level_sizes,
+                                    level_names=level_names)
+
+    def _emit(case: str, walk: dict, extra: dict | None = None) -> dict:
+        by_level = walk["wire_bytes_by_level_total"]
+        row = {
+            "bench": "hierarchy", "mesh": mesh_name, "chips": chips,
+            "group_size": group, "case": case,
+            "level_names": list(level_names),
+            "level_sizes": list(level_sizes),
+            "update_mb_per_device": round(n * 4 / 1e6, 2),
+            "wire_bytes_per_device": walk["wire_bytes"],
+            "wire_bytes_by_level_total": by_level,
+            "wire_bytes_intra_total": walk["wire_bytes_intra_total"],
+            "wire_bytes_inter_total": walk["wire_bytes_inter_total"],
+            "sim_time_us": round(_sim_time_s(by_level, chips) * 1e6, 2),
+            "collectives": {k: v["count"]
+                            for k, v in walk["per_collective"].items()}}
+        row.update(extra or {})
+        print(json.dumps(row))
+        return row
 
     cases = {
         "flat_butterfly": lambda u: ccache.tree_merge(u, "dp", mf.ADD),
@@ -80,26 +134,40 @@ def _sub_main(quick: bool) -> None:
             u, "dp", mf.ADD, topo, force_tree=True),
         "hierarchical_int8_inter": lambda u: ccache.hierarchical_merge(
             u, "dp", mf.int8_compressed_add(), topo, compress=True),
+        "hier3_rep": lambda u: ccache.hierarchical_merge(
+            u, "dp", mf.ADD, plan3),
+        "hier3_lane": lambda u: ccache.hierarchical_merge(
+            u, "dp", mf.ADD, plan3_lane),
         "psum_fastpath": lambda u: ccache.reduce_update(u, "dp", mf.ADD),
     }
+    rows = {}
     for name, fn in cases.items():
-        f = jax.jit(shard_map(fn, mesh=mesh, in_specs=P("dp"),
-                              out_specs=P("dp"), check_rep=False))
-        hlo = f.lower(sds).compile().as_text()
-        walk = hlo_cost.analyze_hlo(hlo, intra_group_size=group)
-        intra = walk["wire_bytes_intra_total"]
-        inter = walk["wire_bytes_inter_total"]
-        sim_s = intra / (chips * ICI_BW) + inter / DCI_TOTAL
-        print(json.dumps({
-            "bench": "hierarchy", "mesh": mesh_name, "chips": chips,
-            "group_size": group, "case": name,
-            "update_mb_per_device": round(n * 4 / 1e6, 2),
-            "wire_bytes_per_device": walk["wire_bytes"],
-            "wire_bytes_intra_total": intra,
-            "wire_bytes_inter_total": inter,
-            "sim_time_us": round(sim_s * 1e6, 2),
-            "collectives": {k: v["count"]
-                            for k, v in walk["per_collective"].items()}}))
+        rows[name] = _emit(name, _walk(fn))
+
+    # Merge-on-evict at pod scope: the per-step eager levels (chip+host)
+    # vs the deferred pod-level commit paid once every K steps.
+    step_walk = _walk(lambda u: ccache.partial_merge(u, "dp", mf.ADD,
+                                                     plan3_defer))
+    commit_walk = _walk(
+        lambda u, m: ccache.commit_deferred(
+            ccache.PendingUpdate(update=u), m, "dp", mf.ADD, plan3_defer),
+        in_specs=(P("dp"), P("dp")), args=(sds, sds))
+    rows["hier3_defer_step"] = _emit("hier3_defer_step", step_walk)
+    rows["hier3_defer_commit"] = _emit("hier3_defer_commit", commit_walk)
+    step_lv = step_walk["wire_bytes_by_level_total"]
+    commit_lv = commit_walk["wire_bytes_by_level_total"]
+    amortized = [s + c / DEFER_K for s, c in zip(step_lv, commit_lv)]
+    eager_top = rows["hier3_lane"]["wire_bytes_by_level_total"][-1]
+    print(json.dumps({
+        "bench": "hierarchy", "mesh": mesh_name, "chips": chips,
+        "case": "hier3_defer_amortized", "commit_every": DEFER_K,
+        "level_names": list(level_names),
+        "wire_bytes_by_level_total": amortized,
+        "sim_time_us": round(_sim_time_s(amortized, chips) * 1e6, 2),
+        "top_level_bytes_eager": eager_top,
+        "top_level_bytes_amortized": amortized[-1],
+        "top_level_amortization_x": round(
+            eager_top / amortized[-1], 2) if amortized[-1] else None}))
 
 
 if __name__ == "__main__":

@@ -25,7 +25,8 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=8,
                     help="hierarchy divisor vs Table 2 (1 = full size)")
     ap.add_argument("--only", default="",
-                    help="comma list: fig6,fig7,fig8,fig9,table3,lm,hier")
+                    help="comma list: fig6,fig7,fig8,fig9,table3,lm,hier,"
+                         "fabric")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -87,6 +88,47 @@ def main() -> None:
                 inter["flat_butterfly"] / inter["hierarchical"], 1)
             summary["hier_sim_speedup_x"] = round(
                 sim["flat_butterfly"] / sim["hierarchical"], 2)
+        top = {r.get("case"): r["wire_bytes_by_level_total"][-1]
+               for r in rows
+               if r.get("wire_bytes_by_level_total")}
+        if top.get("flat_butterfly") and top.get("hier3_lane"):
+            summary["hier3_top_level_reduction_x"] = round(
+                top["flat_butterfly"] / top["hier3_lane"], 1)
+        amort = next((r for r in rows
+                      if r.get("case") == "hier3_defer_amortized"), None)
+        if amort and amort.get("top_level_amortization_x"):
+            summary["hier3_defer_amortization_x"] = \
+                amort["top_level_amortization_x"]
+
+    if want("fabric"):
+        from benchmarks.simulator import default_fabric
+        fabric = default_fabric(scale=4 if args.quick else 1)
+        payload = (1 << 22) if args.quick else (1 << 24)  # bytes/rank
+        variants = {
+            "flat_butterfly": fabric.flat_merge(payload),
+            "hier_rep": fabric.hierarchical_merge(payload,
+                                                  lane_parallel=False),
+            "hier_lane": fabric.hierarchical_merge(payload,
+                                                   lane_parallel=True),
+            "hier_lane_defer8": fabric.hierarchical_merge(
+                payload, lane_parallel=True, defer_levels=1, commit_every=8),
+        }
+        for name, r in variants.items():
+            _emit([{"bench": "fabric", "case": name,
+                    "ranks": fabric.num_ranks,
+                    "payload_mb": round(payload / 1e6, 2), **r}])
+        flat = variants["flat_butterfly"]
+        lane = variants["hier_lane"]
+        rep = variants["hier_rep"]
+        defer = variants["hier_lane_defer8"]
+        summary["fabric_top_level_reduction_x"] = round(
+            flat["bytes_by_level"][-1] / lane["bytes_by_level"][-1], 1)
+        summary["fabric_lane_vs_rep_speedup_x"] = round(
+            rep["time_s"] / lane["time_s"], 2)
+        summary["fabric_defer_top_amortization_x"] = round(
+            lane["bytes_by_level"][-1] / defer["bytes_by_level"][-1], 1)
+        summary["fabric_hier_vs_flat_speedup_x"] = round(
+            flat["time_s"] / lane["time_s"], 2)
 
     if want("lm"):
         from benchmarks.lm_tier import (bench_cscatter, bench_grad_accum,

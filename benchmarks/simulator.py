@@ -355,6 +355,140 @@ def simulate(mc: MachineConfig, core, op, line, extra):
     return state
 
 
+# --------------------------------------------------------------------------
+# Multi-level fabric model: the interconnect counterpart of the cache
+# hierarchy above, matching the MergePlan IR level-for-level. Analytic (no
+# devices needed): given per-level fanouts and link rates it predicts the
+# per-level wire-byte vector and time of a flat butterfly vs the
+# hierarchical engine (representative or lane-parallel exchange), including
+# the merge-on-evict amortization of deferred top levels. The real-HLO
+# counterpart is benchmarks/hierarchy.py; tests/test_simulator.py pins the
+# model's identities (top-level reduction factor, lane-parallel speedup,
+# defer amortization).
+# --------------------------------------------------------------------------
+
+
+def _rounds(fanout: int) -> int:
+    """Exchange rounds to all-reduce ``fanout`` siblings: butterfly for
+    powers of two, circulate-and-fold ring otherwise."""
+    if fanout & (fanout - 1) == 0:
+        return max(fanout.bit_length() - 1, 0)
+    return fanout - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricLevel:
+    """One interconnect level: ``fanout`` units meet over links that give
+    each participating rank ``link_bw`` bytes/s, ``latency_s`` per round."""
+
+    name: str
+    fanout: int
+    link_bw: float
+    latency_s: float = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """An N-level interconnect, innermost (cheapest) level first."""
+
+    levels: tuple[FabricLevel, ...]
+
+    @property
+    def num_ranks(self) -> int:
+        n = 1
+        for lv in self.levels:
+            n *= lv.fanout
+        return n
+
+    def strides(self) -> list[int]:
+        out, acc = [], 1
+        for lv in self.levels:
+            out.append(acc)
+            acc *= lv.fanout
+        return out
+
+    def _result(self, bytes_by_level, active_by_level, rounds_by_level):
+        times = []
+        for lv, b, act, r in zip(self.levels, bytes_by_level,
+                                 active_by_level, rounds_by_level):
+            agg = max(act, 1) * lv.link_bw
+            times.append(b / agg + r * lv.latency_s)
+        return {
+            "bytes_by_level": list(bytes_by_level),
+            "time_by_level_s": times,
+            "time_s": sum(times),
+            "level_names": [lv.name for lv in self.levels],
+        }
+
+    def flat_merge(self, payload_bytes: float) -> dict:
+        """Flat recursive-doubling butterfly: every round moves the full
+        payload on every rank; rounds with step >= a level's block size
+        cross that level's links."""
+        P = self.num_ranks
+        bytes_by_level, rounds_by_level = [], []
+        for lv in self.levels:
+            r = _rounds(lv.fanout)
+            rounds_by_level.append(r)
+            bytes_by_level.append(r * P * payload_bytes)
+        return self._result(bytes_by_level, [P] * len(self.levels),
+                            rounds_by_level)
+
+    def hierarchical_merge(self, payload_bytes: float,
+                           lane_parallel: bool = True,
+                           defer_levels: int = 0,
+                           commit_every: int = 1) -> dict:
+        """The MergePlan engine on this fabric.
+
+        Level 0 is a block-confined all-rank exchange. Upper level i moves
+        one payload per *unit* (P/B_i contributions): serialized on the
+        representative (``lane_parallel=False``, plus the unit broadcast on
+        the sub-level), or chunked over the unit's B_i lanes with an
+        intra-unit all-gather (``lane_parallel=True``) — same bytes, B_i
+        more ranks driving the expensive links. The top ``defer_levels``
+        levels commit once every ``commit_every`` steps; their bytes and
+        time are amortized per step (the paper's mergeable bit).
+        """
+        P = self.num_ranks
+        strides = self.strides()
+        n = len(self.levels)
+        bytes_by_level = [0.0] * n
+        active = [P] * n
+        rounds_by_level = [0] * n
+        for i, lv in enumerate(self.levels):
+            r = _rounds(lv.fanout)
+            rounds_by_level[i] = r
+            B = strides[i]
+            if i == 0 or B == 1:
+                bytes_by_level[i] += r * P * payload_bytes
+                continue
+            # Cross-unit exchange: P/B payload-sized contributions per round.
+            bytes_by_level[i] += r * (P / B) * payload_bytes
+            if lane_parallel:
+                # All-gather of combined chunks inside each unit rides the
+                # sub-level links: (B-1)/B of the payload per rank.
+                bytes_by_level[i - 1] += (B - 1) / B * P * payload_bytes
+            else:
+                active[i] = P // B
+                # Unit broadcast of the representative's result (sub-level).
+                bytes_by_level[i - 1] += (B - 1) / B * P * payload_bytes
+        if defer_levels:
+            k = max(1, commit_every)
+            for i in range(n - defer_levels, n):
+                bytes_by_level[i] /= k
+        return self._result(bytes_by_level, active, rounds_by_level)
+
+
+def default_fabric(scale: int = 1) -> Fabric:
+    """A pod2x16x16-shaped 3-level fabric (chip/host/pod), rates mirroring
+    repro.launch.hlo_analysis: chip-local ICI, half-rate host ICI, and a
+    per-rank share of the shared inter-pod DCI pipe."""
+    return Fabric(levels=(
+        FabricLevel("chip", 16 // scale, 50e9, 1e-6),
+        FabricLevel("host", 16 // scale, 25e9, 2e-6),
+        FabricLevel("pod", 2, 12.5e9, 10e-6),
+    ))
+
+
 def run_trace(mc: MachineConfig, trace: dict) -> dict:
     """trace: dict with core/op/line/extra numpy arrays -> result dict."""
     n = len(trace["op"])

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""CI guard over the hierarchy dryrun's per-level wire-byte vectors.
+
+Reads the benchmark JSON stream on stdin (passed through unchanged), finds
+the 3-level hierarchy rows, and asserts the cost-model invariants the
+MergePlan engine is built on:
+
+1. monotonicity — the hierarchical merge puts monotonically more bytes on
+   monotonically cheaper levels (chip >= host >= pod);
+2. top-level reduction — the pod level carries at least group/2 fewer bytes
+   than the flat butterfly's (the representative/lane exchange working);
+3. defer amortization — the merge-on-evict commit amortizes top-level
+   traffic by at least half the commit interval.
+
+A regression in the classifier (hlo_cost), the permutes, or the engine's
+stage compilation breaks one of these long before it breaks correctness
+tests — this is the cost model's canary.
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"check_level_costs: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    rows = []
+    for line in sys.stdin:
+        print(line, end="")  # pass the stream through for the log
+        line = line.strip()
+        if line.startswith("{"):
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    hier = {r.get("case"): r for r in rows if r.get("bench") == "hierarchy"}
+    required = ("flat_butterfly", "hier3_rep", "hier3_lane",
+                "hier3_defer_amortized")
+    missing = [c for c in required if c not in hier]
+    if missing:
+        fail(f"missing hierarchy cases {missing} "
+             f"(got {sorted(hier)})")
+
+    flat = hier["flat_butterfly"]["wire_bytes_by_level_total"]
+    group = hier["flat_butterfly"].get("group_size", 0)
+    for case in ("hier3_rep", "hier3_lane"):
+        vec = hier[case]["wire_bytes_by_level_total"]
+        names = hier[case].get("level_names", [])
+        if any(a < b for a, b in zip(vec, vec[1:])):
+            fail(f"{case}: per-level bytes {vec} ({names}) not "
+                 f"monotonically cheaper at lower levels")
+        if vec[-1] <= 0:
+            fail(f"{case}: zero top-level bytes {vec}")
+        reduction = flat[-1] / vec[-1]
+        if reduction < group / 2:
+            fail(f"{case}: top-level reduction {reduction:.1f}x vs flat "
+                 f"butterfly below group/2 = {group / 2:.0f}x")
+
+    amort = hier["hier3_defer_amortized"]
+    k = amort.get("commit_every", 0)
+    x = amort.get("top_level_amortization_x") or 0
+    if x < k / 2:
+        fail(f"deferred commit amortizes top level {x}x < K/2 = {k / 2}")
+
+    print(f"check_level_costs: OK (top-level reduction "
+          f"{flat[-1] / hier['hier3_lane']['wire_bytes_by_level_total'][-1]:.0f}x, "
+          f"defer amortization {x}x/K={k})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full offline test suite plus the quick benchmark cells
-# (paper fig6 + the hierarchical-merge wire comparison).
+# (paper fig6, the hierarchical-merge wire comparison on a 3-level
+# chip/host/pod topology, and the analytic fabric model), with the
+# per-level wire-byte vector checked for cost-model regressions: bytes must
+# be monotonically cheaper at lower levels, the top level must shrink by
+# ~the group factor vs the flat butterfly, and the merge-on-evict commit
+# must amortize top-level traffic by ~K (scripts/check_level_costs.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --quick --only fig6,hier
+    python -m benchmarks.run --quick --only fig6,hier,fabric \
+    | python scripts/check_level_costs.py

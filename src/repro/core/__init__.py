@@ -8,12 +8,19 @@ from repro.core.ccache import (
     c_update,
     c_write,
     commit,
+    commit_deferred,
     hierarchical_merge,
     merge,
+    partial_merge,
     privatize,
     reduce_update,
     soft_merge,
     tree_merge,
+)
+from repro.core.merge_plan import (
+    MergeLevel,
+    MergePlan,
+    compile_plan,
 )
 from repro.core.blocked import (
     BlockedCache,

@@ -16,27 +16,31 @@ Maps the paper's mechanism onto a TPU mesh (DESIGN.md §2):
 * ``soft_merge``   — defers reconciliation: the local delta is coalesced into
   a pending-update accumulator (``combine``), and the expensive cross-device
   merge happens once, later (merge-on-evict at the program level).
-* ``MergeTopology`` / ``hierarchical_merge`` — topology-aware two-level
-  merging: the device axis is split into groups of ``group_size`` devices;
-  intra-group merges ride the fused XLA collective (cheap ICI — the COUP
-  analogue), one representative per group runs the inter-group butterfly with
-  the software combine (and optional encode/decode wire compression), and the
-  result is broadcast back down the group. See docs/merge_topology.md for the
-  usage guide and the jax-0.4.37 compat policy.
+* ``MergePlan`` / ``hierarchical_merge`` — topology-aware N-level merging:
+  the device axis is described by a ``MergePlan`` IR (``repro.core.
+  merge_plan``) whose levels — e.g. chip / host / pod / DCI — compile into a
+  sequence of level-local combine, representative- or lane-parallel
+  cross-unit exchange, and unit-broadcast stages. Levels marked ``defer``
+  are excluded from the eager merge and committed from ``soft_merge``'s
+  ``PendingUpdate`` every K steps (the paper's mergeable bit: merge-on-evict
+  at pod scope). ``MergeTopology`` survives as the two-level shorthand and
+  compiles onto the same IR. See docs/merge_topology.md.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import compat
-from repro.core.merge_functions import MergeFn, ADD
+from repro.core import compat, permutes
+from repro.core.merge_functions import MergeFn
+from repro.core.merge_plan import (LevelStage, MergePlan, compile_plan,
+                                   split_eager_deferred)
 
 PyTree = Any
 
@@ -72,10 +76,6 @@ def c_update(view: CView, fn) -> CView:
 # ---------------------------------------------------------------------------
 
 
-def _butterfly_perms(size: int, step: int):
-    return [(i, i ^ step) for i in range(size)]
-
-
 def tree_merge(update: PyTree, axis_name, merge: MergeFn,
                compress: bool = False) -> PyTree:
     """Recursive-doubling all-reduce of ``update`` over ``axis_name``.
@@ -86,7 +86,7 @@ def tree_merge(update: PyTree, axis_name, merge: MergeFn,
     encode/decode, each round exchanges the compressed wire format.
     """
     size = compat.axis_size(axis_name)
-    if size & (size - 1) != 0:  # non-power-of-two fallback
+    if not permutes.is_pow2(size):  # non-power-of-two fallback
         gathered = lax.all_gather(update, axis_name, axis=0, tiled=False)
         def _fold(x):
             acc = x[0]
@@ -99,7 +99,7 @@ def tree_merge(update: PyTree, axis_name, merge: MergeFn,
         leaves, treedef = jax.tree.flatten(update)
         step = 1
         while step < size:
-            perm = _butterfly_perms(size, step)
+            perm = permutes.butterfly_perms(size, step)
             wire = [merge.encode(l) for l in leaves]
             other = lax.ppermute(wire, axis_name, perm=perm)
             # Decode our own wire too so both ranks fold identically-quantized
@@ -112,7 +112,7 @@ def tree_merge(update: PyTree, axis_name, merge: MergeFn,
     u = update
     step = 1
     while step < size:
-        perm = _butterfly_perms(size, step)
+        perm = permutes.butterfly_perms(size, step)
         other = lax.ppermute(u, axis_name, perm=perm)
         u = merge.tree_combine(u, other)
         step <<= 1
@@ -127,32 +127,27 @@ _XLA_REDUCERS = {
 
 
 # ---------------------------------------------------------------------------
-# Hierarchical (topology-aware) merging: intra-group fast path + inter-group
-# representative butterfly. See docs/merge_topology.md.
+# Hierarchical (topology-aware) merging on the MergePlan IR.
+# See repro/core/merge_plan.py for the IR and docs/merge_topology.md for the
+# usage guide.
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class MergeTopology:
-    """Splits a device axis into (intra-group, inter-group) merge levels.
+    """Two-level shorthand: groups of ``group_size`` ranks + one inter level.
 
-    ``group_size`` devices form one group (e.g. one pod's worth of ranks on a
-    flattened data-parallel axis): groups are aligned, contiguous rank ranges
-    ``[g*group_size, (g+1)*group_size)``. Intra-group combines ride cheap
-    links (ICI) and use the fused XLA collective when the merge has a fixed
-    ``xla_reduce`` op; only rank 0 of each group (the representative) joins
-    the inter-group exchange over expensive links (DCI), after which the
-    result is broadcast back down the group.
-
-    ``axis_name`` optionally pins the topology to one named axis; when None
-    the axis passed at the merge call site is used. ``use_xla_intra=False``
-    forces the software ppermute path at the intra level too (testing /
-    arbitrary combines).
+    Kept as the convenience constructor for the common "one pod per group"
+    case; compiles onto the N-level ``MergePlan`` IR via ``to_plan``.
+    ``use_xla_intra=False`` forces the software ppermute path at the intra
+    level (testing / arbitrary combines); ``lane_parallel=True`` shards the
+    representative role over a group's lanes for the inter exchange.
     """
 
     group_size: int
-    axis_name: Optional[str] = None
+    axis_name: Optional[Any] = None
     use_xla_intra: bool = True
+    lane_parallel: bool = False
 
     def resolve_axis(self, axis_name):
         return self.axis_name if self.axis_name is not None else axis_name
@@ -169,93 +164,150 @@ class MergeTopology:
         g = self.group_size
         return [list(range(i * g, (i + 1) * g)) for i in range(size // g)]
 
+    def to_plan(self, size: int, compress: bool = False) -> MergePlan:
+        self.validate(size)
+        return MergePlan.two_level(
+            self.group_size, size, axis_name=self.axis_name,
+            use_xla_intra=self.use_xla_intra, compress_inter=compress,
+            lane_parallel=self.lane_parallel)
 
-def _intra_ring_perm(size: int, group: int) -> list[tuple[int, int]]:
-    """Each rank -> next lane in its group's ring (full permutation)."""
-    return [(i, (i // group) * group + ((i % group) + 1) % group)
-            for i in range(size)]
 
-
-def _rep_perms(size: int, group: int) -> list[list[tuple[int, int]]]:
-    """Inter-group exchange perms among the group representatives.
-
-    Only ranks ``g*group`` participate; everyone else gets an identity
-    self-pair (required under vmap, and free on hardware — a self-copy never
-    leaves the chip). Power-of-two group counts get a recursive-doubling
-    butterfly; otherwise a ring that circulates values ``n_groups - 1`` times.
-    """
-    n_groups = size // group
-    perms = []
-    if n_groups & (n_groups - 1) == 0:
-        step = 1
-        while step < n_groups:
-            pairs = {g * group: (g ^ step) * group for g in range(n_groups)}
-            perms.append([(i, pairs.get(i, i)) for i in range(size)])
-            step <<= 1
-    else:
-        ring = {g * group: ((g + 1) % n_groups) * group
-                for g in range(n_groups)}
-        perms.append([(i, ring.get(i, i)) for i in range(size)])
-    return perms
+Topology = Union[MergeTopology, MergePlan]
 
 
 def _tree_select(pred, a: PyTree, b: PyTree) -> PyTree:
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def _intra_group_combine(update: PyTree, axis_name, merge: MergeFn,
-                         size: int, topology: "MergeTopology",
-                         force_tree: bool) -> PyTree:
-    """Level 1: every rank ends with its group's combined update."""
-    group = topology.group_size
-    if topology.use_xla_intra and not force_tree \
-            and merge.xla_reduce in _XLA_REDUCERS:
+def _resolve_plan(topology: Topology, axis_name,
+                  compress: bool) -> tuple[Optional[MergePlan], Any, int]:
+    """Normalize (MergeTopology | MergePlan) -> (plan, axis, size).
+
+    Returns ``plan=None`` for the degenerate flat dispatch (group_size <= 1
+    or a single rank). The function-level ``compress`` flag maps onto the
+    *outermost* level — compression where bytes are scarcest — matching the
+    two-level engine's inter-group semantics.
+    """
+    axis = topology.resolve_axis(axis_name)
+    size = compat.axis_size(axis)
+    if not isinstance(topology, MergePlan):
+        if topology.group_size <= 1 or size == 1:
+            return None, axis, size
+        topology = topology.to_plan(size)
+    plan = topology
+    plan.validate(size)
+    if compress and not any(lv.compress for lv in plan.levels):
+            # Attach to the outermost level that actually executes — size-1
+            # levels compile away and would silently swallow the flag.
+            idx = max((i for i, lv in enumerate(plan.levels) if lv.size > 1),
+                      default=None)
+            if idx is not None:
+                levels = (plan.levels[:idx]
+                          + (dataclasses.replace(plan.levels[idx],
+                                                 compress=True),)
+                          + plan.levels[idx + 1:])
+                plan = dataclasses.replace(plan, levels=levels)
+    return plan, axis, size
+
+
+# -- stage executors --------------------------------------------------------
+
+
+def _stage_innermost(u: PyTree, axis_name, merge: MergeFn, stage: LevelStage,
+                     size: int, force_tree: bool,
+                     use_compress: bool) -> PyTree:
+    """stride == 1: every rank combines directly within its aligned block.
+
+    Fixed-op merges ride the fused XLA collective (``axis_index_groups``
+    blocks) — the COUP fast path; everything else (or vmap, which rejects
+    grouped collectives; or a tuple merge axis, where jax restricts grouped
+    collectives to a single axis) runs the block-confined software
+    butterfly/ring.
+    """
+    fanout = stage.fanout
+    if (stage.combine_mode == "xla" and not force_tree and not use_compress
+            and merge.xla_reduce in _XLA_REDUCERS):
         reducer = _XLA_REDUCERS[merge.xla_reduce]
-        try:
-            return jax.tree.map(
-                functools.partial(reducer, axis_name=axis_name,
-                                  axis_index_groups=topology.groups(size)),
-                update)
-        except NotImplementedError:
-            pass  # vmap collectives reject axis_index_groups; software path.
-    if group & (group - 1) == 0:
-        # Recursive doubling with steps < group stays inside the aligned
-        # group (i ^ step keeps the high bits), so the flat butterfly perm
-        # doubles as the intra-group one.
-        u = update
+        whole_axis = stage.block == size
+        if whole_axis or not isinstance(axis_name, (tuple, list)):
+            kw = {} if whole_axis else {
+                "axis_index_groups": [list(range(b * fanout, (b + 1) * fanout))
+                                      for b in range(size // fanout)]}
+            try:
+                return jax.tree.map(
+                    functools.partial(reducer, axis_name=axis_name, **kw), u)
+            except NotImplementedError:
+                pass  # vmap collectives reject axis_index_groups.
+
+    if permutes.is_pow2(fanout):
+        if use_compress:
+            leaves, treedef = jax.tree.flatten(u)
+            step = 1
+            while step < fanout:
+                perm = permutes.butterfly_perms(size, step)
+                wire = [merge.encode(l) for l in leaves]
+                other = lax.ppermute(wire, axis_name, perm=perm)
+                leaves = [merge.combine(merge.decode(w), merge.decode(o))
+                          for w, o in zip(wire, other)]
+                step <<= 1
+            return jax.tree.unflatten(treedef, leaves)
         step = 1
-        while step < group:
+        while step < fanout:
+            # Steps below the block size keep i ^ step inside the aligned
+            # block, so the flat butterfly perm doubles as the confined one.
             other = lax.ppermute(u, axis_name,
-                                 perm=_butterfly_perms(size, step))
+                                 perm=permutes.butterfly_perms(size, step))
             u = merge.tree_combine(u, other)
             step <<= 1
         return u
-    # Any group size: circulate values around the group ring, folding as
-    # they pass — group-1 rounds, each rank sees every group member once.
-    perm = _intra_ring_perm(size, group)
-    recv = update
-    acc = update
-    for _ in range(group - 1):
+
+    # Any block size: circulate contributions around the block ring, folding
+    # as they pass — fanout-1 rounds, each rank sees every member once.
+    perm = permutes.ring_perm(size, fanout)
+    if use_compress:
+        leaves, treedef = jax.tree.flatten(u)
+        wire = [merge.encode(l) for l in leaves]
+        acc = [merge.decode(w) for w in wire]
+        for _ in range(fanout - 1):
+            wire = lax.ppermute(wire, axis_name, perm=perm)
+            acc = [merge.combine(a, merge.decode(w))
+                   for a, w in zip(acc, wire)]
+        return jax.tree.unflatten(treedef, acc)
+    recv = u
+    acc = u
+    for _ in range(fanout - 1):
         recv = lax.ppermute(recv, axis_name, perm=perm)
         acc = merge.tree_combine(acc, recv)
     return acc
 
 
-def _inter_group_combine(update: PyTree, axis_name, merge: MergeFn,
-                         size: int, group: int, is_rep,
-                         compress: bool) -> PyTree:
-    """Level 2: representatives exchange group aggregates across groups.
+def _broadcast_within_units(u: PyTree, axis_name, size: int, stride: int,
+                            lane) -> PyTree:
+    """Binomial broadcast of lane 0's value over each aligned
+    ``stride``-sized unit — ceil(log2 stride) swap rounds."""
+    for k, perm in permutes.binomial_broadcast_perms(size, stride):
+        recv = lax.ppermute(u, axis_name, perm=perm)
+        u = _tree_select(lane < k, u, recv)
+    return u
 
-    Non-representatives are carried through untouched (their ppermute legs
-    are identity self-pairs); ``compress`` puts the merge's encode/decode
-    wire format on these expensive inter-group rounds only.
+
+def _stage_rep(u: PyTree, axis_name, merge: MergeFn, stage: LevelStage,
+               size: int, rank, use_compress: bool) -> PyTree:
+    """Representative-only cross-unit exchange + broadcast down the unit.
+
+    Unit leaders (rank % stride == 0) carry their unit's aggregate through
+    the butterfly/ring across sibling units; non-representatives ride
+    identity self-pairs. ``use_compress`` puts the merge's encode/decode
+    wire format on these expensive rounds only.
     """
-    n_groups = size // group
-    perms = _rep_perms(size, group)
-    butterfly = n_groups & (n_groups - 1) == 0
+    stride, fanout = stage.stride, stage.fanout
+    lane = rank % stride
+    is_rep = lane == 0
+    perms = permutes.rep_exchange_perms(size, stride, fanout)
+    butterfly = permutes.is_pow2(fanout)
 
-    if compress and merge.encode is not None:
-        leaves, treedef = jax.tree.flatten(update)
+    if use_compress:
+        leaves, treedef = jax.tree.flatten(u)
         if butterfly:
             for perm in perms:
                 wire = [merge.encode(l) for l in leaves]
@@ -270,89 +322,226 @@ def _inter_group_combine(update: PyTree, axis_name, merge: MergeFn,
             # fold identically-quantized values.
             wire = [merge.encode(l) for l in leaves]
             acc = [merge.decode(w) for w in wire]
-            for _ in range(n_groups - 1):
+            for _ in range(fanout - 1):
                 wire = lax.ppermute(wire, axis_name, perm=perms[0])
                 acc = [merge.combine(a, merge.decode(w))
                        for a, w in zip(acc, wire)]
             leaves = [jnp.where(is_rep, a, l) for a, l in zip(acc, leaves)]
-        return jax.tree.unflatten(treedef, leaves)
-
-    u = update
-    if butterfly:
+        u = jax.tree.unflatten(treedef, leaves)
+    elif butterfly:
         for perm in perms:
             other = lax.ppermute(u, axis_name, perm=perm)
             u = _tree_select(is_rep, merge.tree_combine(u, other), u)
     else:
         recv = u
-        for _ in range(n_groups - 1):
+        for _ in range(fanout - 1):
             recv = lax.ppermute(recv, axis_name, perm=perms[0])
             u = _tree_select(is_rep, merge.tree_combine(u, recv), u)
-    return u
+
+    return _broadcast_within_units(u, axis_name, size, stride, lane)
 
 
-def _group_broadcast(update: PyTree, axis_name, size: int, group: int,
-                     lane) -> PyTree:
-    """Level 3: binomial broadcast of the representative's value down its
-    group — ceil(log2(group)) swap rounds, all intra-group traffic."""
+def _lane_chunk(x: jax.Array, stride: int, lane, atom: int) -> jax.Array:
+    """This rank's 1/stride slice of a leaf (zero-padded to divide).
+
+    The payload flattens to rows of ``atom`` trailing elements — the unit a
+    structure-sensitive combine treats as one value (e.g. COMPLEX_MUL's
+    real/imag pairs, ``wire_atom=2``) — and rows are dealt round-robin-free
+    (contiguous blocks) across the unit's lanes.
+    """
+    if atom > 1 and x.size % atom == 0:
+        flat = x.reshape(-1, atom)
+    else:
+        flat = x.reshape(-1)
+    n = flat.shape[0]
+    c = -(-n // stride)
+    if stride * c != n:
+        flat = jnp.pad(flat, ((0, stride * c - n),)
+                       + ((0, 0),) * (flat.ndim - 1))
+    return lax.dynamic_index_in_dim(flat.reshape((stride, c) + flat.shape[1:]),
+                                    lane, 0, keepdims=False)
+
+
+def _lane_all_gather(chunks: list[jax.Array], axis_name, size: int,
+                     stride: int, lane) -> list[jax.Array]:
+    """Reassemble each unit's (stride, chunk) buffer from per-lane chunks:
+    recursive-doubling for power-of-two units, ring otherwise. All traffic
+    stays inside the unit (sub-level links)."""
+    bufs = [lax.dynamic_update_slice(
+        jnp.zeros((stride,) + ch.shape, ch.dtype), ch[None], (lane,) + (0,) * ch.ndim)
+        for ch in chunks]
+    if permutes.is_pow2(stride):
+        seg = 1
+        for perm in permutes.lane_gather_doubling_perms(size, stride):
+            start = (lane // seg) * seg
+            segs = [lax.dynamic_slice(b, (start,) + (0,) * (b.ndim - 1),
+                                      (seg,) + b.shape[1:]) for b in bufs]
+            other = lax.ppermute(segs, axis_name, perm=perm)
+            their_start = start ^ seg
+            bufs = [lax.dynamic_update_slice(
+                b, o, (their_start,) + (0,) * (b.ndim - 1))
+                for b, o in zip(bufs, other)]
+            seg <<= 1
+        return bufs
+    perm = permutes.ring_perm(size, stride)
+    cur = chunks
+    for s in range(1, stride):
+        cur = lax.ppermute(cur, axis_name, perm=perm)
+        src = (lane - s) % stride
+        bufs = [lax.dynamic_update_slice(
+            b, ch[None], (src,) + (0,) * ch.ndim)
+            for b, ch in zip(bufs, cur)]
+    return bufs
+
+
+def _stage_lane(u: PyTree, axis_name, merge: MergeFn, stage: LevelStage,
+                size: int, rank, use_compress: bool) -> PyTree:
+    """Lane-parallel cross-unit exchange: the representative role is sharded
+    over the unit's lanes. Each lane carries a 1/stride chunk of the payload
+    through the butterfly/ring across sibling units (same-lane pairing), then
+    the unit all-gathers the combined chunks. Total cross-unit bytes equal
+    the representative-only exchange; per-link bytes drop by the unit size,
+    so the expensive level's bandwidth parallelizes instead of serializing
+    on lane 0.
+    """
+    stride, fanout = stage.stride, stage.fanout
+    lane = rank % stride
+    leaves, treedef = jax.tree.flatten(u)
+    chunks = [_lane_chunk(x, stride, lane, merge.wire_atom) for x in leaves]
+    perms = permutes.lane_exchange_perms(size, stride, fanout)
+    butterfly = permutes.is_pow2(fanout)
+
+    if use_compress:
+        if butterfly:
+            for perm in perms:
+                wire = [merge.encode(ch) for ch in chunks]
+                other = lax.ppermute(wire, axis_name, perm=perm)
+                chunks = [merge.combine(merge.decode(w), merge.decode(o))
+                          for w, o in zip(wire, other)]
+        else:
+            wire = [merge.encode(ch) for ch in chunks]
+            chunks = [merge.decode(w) for w in wire]
+            for _ in range(fanout - 1):
+                wire = lax.ppermute(wire, axis_name, perm=perms[0])
+                chunks = [merge.combine(a, merge.decode(w))
+                          for a, w in zip(chunks, wire)]
+    elif butterfly:
+        for perm in perms:
+            other = lax.ppermute(chunks, axis_name, perm=perm)
+            chunks = [merge.combine(a, b) for a, b in zip(chunks, other)]
+    else:
+        recv = chunks
+        for _ in range(fanout - 1):
+            recv = lax.ppermute(recv, axis_name, perm=perms[0])
+            chunks = [merge.combine(a, b) for a, b in zip(chunks, recv)]
+
+    bufs = _lane_all_gather(chunks, axis_name, size, stride, lane)
+    out = []
+    for x, b in zip(leaves, bufs):
+        full = b.reshape((b.shape[0] * b.shape[1],) + b.shape[2:])
+        atom = full.shape[1] if full.ndim > 1 else 1
+        out.append(lax.slice_in_dim(full, 0, x.size // atom).reshape(x.shape))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _run_stages(update: PyTree, axis_name, merge: MergeFn,
+                stages: list[LevelStage], size: int,
+                force_tree: bool) -> PyTree:
+    """Execute compiled stages in order. Invariant: entering stage i every
+    rank holds its stride-sized unit's combination (replicated within the
+    unit); leaving it, its block's. After the last stage every rank holds
+    the full combination over the covered levels."""
     u = update
-    k = 1
-    while k < group:
-        perm = []
-        for i in range(size):
-            l = i % group
-            partner = l ^ k
-            if l < 2 * k and partner < group:
-                perm.append((i, (i // group) * group + partner))
-            else:
-                perm.append((i, i))
-        recv = lax.ppermute(u, axis_name, perm=perm)
-        u = _tree_select(lane < k, u, recv)
-        k <<= 1
+    rank = None
+    if any(s.stride > 1 for s in stages):
+        rank = lax.axis_index(axis_name)
+    for st in stages:
+        use_compress = st.compress and merge.encode is not None
+        if st.stride == 1:
+            u = _stage_innermost(u, axis_name, merge, st, size, force_tree,
+                                 use_compress)
+        elif st.lane_parallel:
+            u = _stage_lane(u, axis_name, merge, st, size, rank, use_compress)
+        else:
+            u = _stage_rep(u, axis_name, merge, st, size, rank, use_compress)
     return u
 
 
 def hierarchical_merge(update: PyTree, axis_name, merge: MergeFn,
-                       topology: MergeTopology, compress: bool = False,
+                       topology: Topology, compress: bool = False,
                        force_tree: bool = False) -> PyTree:
-    """Two-level all-reduce of ``update`` with an arbitrary combine.
+    """N-level all-reduce of ``update`` with an arbitrary combine.
 
     Equivalent to ``tree_merge`` (every rank ends with the full combination)
-    but wire-aware: with P ranks in groups of G, the expensive inter-group
-    level moves P/G contributions instead of P — the flat butterfly's
-    cross-group round costs P messages where this costs P/G.
+    but wire-aware: each level's exchange is confined to its link class, and
+    an upper level with units of B ranks moves P/B contributions (or P
+    chunks of 1/B size when lane-parallel) instead of P — the flat
+    butterfly's cross-group rounds cost P full-payload messages where this
+    costs P/B. Runs ALL levels eagerly, including ones marked ``defer``
+    (use ``partial_merge`` + ``commit_deferred`` for merge-on-evict).
     """
-    axis_name = topology.resolve_axis(axis_name)
-    size = compat.axis_size(axis_name)
-    topology.validate(size)
-    group = topology.group_size
-    if group <= 1 or size == 1:
+    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
+    if plan is None:
         # Degenerate: every rank is its own group -> flat dispatch.
         return reduce_update(update, axis_name, merge, compress=compress,
                              force_tree=force_tree)
+    stages = compile_plan(plan, size)
+    return _run_stages(update, axis_name, merge, stages, size, force_tree)
 
-    u = _intra_group_combine(update, axis_name, merge, size, topology,
-                             force_tree)
-    if size // group == 1:
-        return u
-    rank = lax.axis_index(axis_name)
-    lane = rank % group
-    is_rep = lane == 0
-    u = _inter_group_combine(u, axis_name, merge, size, group, is_rep,
-                             compress)
-    return _group_broadcast(u, axis_name, size, group, lane)
+
+def partial_merge(update: PyTree, axis_name, merge: MergeFn,
+                  topology: Topology, compress: bool = False,
+                  force_tree: bool = False) -> PyTree:
+    """Run only the plan's EAGER (non-deferred) levels.
+
+    Every rank ends with its eager-scope block's combination — e.g. with
+    ``chip:4,host:16,pod:2:defer`` each rank holds its host-block (64-rank)
+    aggregate and no pod-crossing traffic has occurred. Accumulate results
+    into a ``PendingUpdate`` (``soft_merge(..., plan=...)``) and settle the
+    deferred levels with ``commit_deferred`` every K steps.
+    """
+    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
+    if plan is None:
+        return update if size == 1 else reduce_update(
+            update, axis_name, merge, compress=compress,
+            force_tree=force_tree)
+    eager, _ = split_eager_deferred(compile_plan(plan, size))
+    return _run_stages(update, axis_name, merge, eager, size, force_tree)
+
+
+def commit_deferred(pending: "PendingUpdate", mem: PyTree, axis_name,
+                    merge_fn: MergeFn, topology: Topology,
+                    key: Optional[jax.Array] = None, compress: bool = False,
+                    force_tree: bool = False) -> PyTree:
+    """Settle the DEFERRED levels of a plan and apply to memory.
+
+    ``pending`` must have been accumulated from ``partial_merge`` outputs
+    (or ``soft_merge(..., plan=...)``): each rank holds the coalesced
+    eager-scope aggregate, so only the deferred upper levels' exchange —
+    the expensive cross-pod traffic — remains, paid once per K steps
+    instead of every step (the paper's mergeable bit, level 2).
+    """
+    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
+    u = pending.update
+    if plan is not None:
+        _, deferred = split_eager_deferred(compile_plan(plan, size))
+        u = _run_stages(u, axis_name, merge_fn, deferred, size, force_tree)
+    return merge_fn.tree_apply(mem, u, key=key)
 
 
 def reduce_update(update: PyTree, axis_name, merge: MergeFn,
                   compress: bool = False, force_tree: bool = False,
-                  topology: Optional["MergeTopology"] = None) -> PyTree:
+                  topology: Optional[Topology] = None) -> PyTree:
     """Cross-device combination of per-device updates.
 
     COUP fast path (fixed op fused into the collective) when available and not
     overridden; CCache flexible path (tree_merge) otherwise. A ``topology``
-    with ``group_size > 1`` routes through the two-level hierarchical engine
-    (``hierarchical_merge``) instead of the flat paths.
+    (two-level ``MergeTopology`` with ``group_size > 1``, or any
+    ``MergePlan``) routes through the N-level hierarchical engine instead of
+    the flat paths.
     """
-    if topology is not None and topology.group_size > 1:
+    if topology is not None and (isinstance(topology, MergePlan)
+                                 or topology.group_size > 1):
         return hierarchical_merge(update, axis_name, merge, topology,
                                   compress=compress, force_tree=force_tree)
     if compress and merge.encode is not None:
@@ -372,7 +561,7 @@ def reduce_update(update: PyTree, axis_name, merge: MergeFn,
 def merge(view: CView, mem: PyTree, axis_name, merge_fn: MergeFn,
           key: Optional[jax.Array] = None, compress: bool = False,
           force_tree: bool = False,
-          topology: Optional[MergeTopology] = None) -> PyTree:
+          topology: Optional[Topology] = None) -> PyTree:
     """Full CCache merge: delta -> cross-device combine -> apply to memory.
 
     Every rank computes the identical combined update, so applying it to the
@@ -400,14 +589,25 @@ class PendingUpdate:
 
 
 def soft_merge(view: CView, pending: Optional[PendingUpdate],
-               merge_fn: MergeFn) -> tuple[CView, PendingUpdate]:
+               merge_fn: MergeFn, axis_name=None,
+               plan: Optional[Topology] = None,
+               force_tree: bool = False) -> tuple[CView, PendingUpdate]:
     """Coalesce the view's delta into ``pending``; reset the view's source.
 
     The cross-device merge is postponed (cf. the mergeable bit): call
     ``commit`` at the merge boundary. Between soft_merges the core keeps
     locality on its private copy.
+
+    With a ``plan`` (and its ``axis_name``), the delta is first settled
+    through the plan's EAGER levels — cheap intra-chip/host traffic paid per
+    step — so ``pending`` accumulates host-scope aggregates and only the
+    deferred upper levels remain for ``commit_deferred``: merge-on-evict at
+    pod scope.
     """
     u = merge_fn.tree_delta(view.src, view.upd)
+    if plan is not None:
+        u = partial_merge(u, axis_name, merge_fn, plan,
+                          force_tree=force_tree)
     if pending is None:
         pending = PendingUpdate(update=u)
     else:
@@ -417,8 +617,13 @@ def soft_merge(view: CView, pending: Optional[PendingUpdate],
 
 def commit(pending: PendingUpdate, mem: PyTree, axis_name, merge_fn: MergeFn,
            key: Optional[jax.Array] = None, compress: bool = False,
-           topology: Optional[MergeTopology] = None) -> PyTree:
-    """Apply a deferred pending update to memory (the eviction-time merge)."""
+           topology: Optional[Topology] = None) -> PyTree:
+    """Apply a deferred pending update to memory (the eviction-time merge).
+
+    Runs the FULL cross-device reduction — use for pendings accumulated
+    without a plan. For plan-accumulated pendings (eager levels already
+    settled) use ``commit_deferred``, which runs only the remaining levels.
+    """
     u = reduce_update(pending.update, axis_name, merge_fn, compress=compress,
                       topology=topology)
     return merge_fn.tree_apply(mem, u, key=key)

@@ -74,16 +74,22 @@ def merge_gradients(
     merge_fn: MergeFn = ADD,
     compress: bool = False,
     mean: bool = True,
-    topology: Optional[ccache.MergeTopology] = None,
+    topology: Optional[ccache.Topology] = None,
 ) -> PyTree:
     """Explicit cross-device gradient merge (inside shard_map).
 
     ``compress=True`` with a merge defining encode/decode exchanges the int8
     wire format in every butterfly round (≈4x fewer collective bytes).
-    ``topology`` routes through the hierarchical engine: intra-group fused
-    reduction on cheap links, representative-only exchange across groups
-    (where compression, if any, is applied).
+    ``topology`` (a two-level ``MergeTopology`` or an N-level ``MergePlan``)
+    routes through the hierarchical engine: fused reduction on the cheap
+    innermost level, representative-only or lane-parallel exchange at the
+    upper levels (where compression, if any, is applied).
     """
+    if topology is not None:
+        # A topology pinned to an axis overrides the argument — resolve
+        # before both the reduction and the mean so they can't disagree
+        # (a mismatch would silently mis-scale every gradient).
+        axis_name = topology.resolve_axis(axis_name)
     merged = ccache.reduce_update(grads, axis_name, merge_fn,
                                   compress=compress, topology=topology)
     if mean and merge_fn.name in ("add", "int8_add"):

@@ -49,6 +49,11 @@ class MergeFn:
     encode: Optional[Callable[[Array], PyTree]] = None
     decode: Optional[Callable[[PyTree], Array]] = None
     needs_key: bool = False  # apply wants a PRNG key (approximate merges)
+    # Contiguous trailing elements ``combine`` treats as one value (2 for
+    # complex real/imag pairs). The lane-parallel hierarchical exchange
+    # splits payloads on atom boundaries so structured combines see whole
+    # elements.
+    wire_atom: int = 1
 
     def tree_delta(self, src: PyTree, upd: PyTree) -> PyTree:
         return jax.tree.map(self.delta, src, upd)
@@ -136,6 +141,7 @@ COMPLEX_MUL = MergeFn(
     combine=_cmul,
     apply=lambda mem, u: _cmul(mem, u),
     identity=_cones,
+    wire_atom=2,
 )
 
 MAX = MergeFn(

@@ -101,13 +101,25 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
         if dump_hlo:
             with open(dump_hlo, "w") as f:
                 f.write(hlo)
-        # Per-level wire accounting on hierarchical meshes: one pod's chips
-        # form a device-group; bytes crossing pods ride the (scarcer) DCI.
-        pod_size = chips // mesh.shape.get("pod", 1)
+        # Per-level wire accounting: the mesh's axis nest (model-innermost
+        # device order) is the physical hierarchy — chip-scope links inside
+        # a model block, host-scope across the data axis, and on multipod
+        # meshes the scarce inter-pod DCI on top. Collective bytes classify
+        # into one vector charged at per-level rates.
+        level_sizes = (mesh.shape["model"], mesh.shape["data"])
+        level_names = ("chip", "host")
+        if multi_pod:
+            level_sizes += (mesh.shape["pod"],)
+            level_names += ("pod",)
         walk = hlo_cost.analyze_hlo(
-            hlo, intra_group_size=pod_size if multi_pod else None)
+            hlo, intra_group_size=(chips // mesh.shape["pod"]
+                                   if multi_pod else None),
+            level_sizes=level_sizes, level_names=level_names)
         rec["hlo_walk"] = {k: walk[k] for k in
                            ("flops", "hbm_bytes", "wire_bytes", "trip_counts")}
+        rec["hlo_walk"]["level_names"] = walk["level_names"]
+        rec["hlo_walk"]["level_sizes"] = walk["level_sizes"]
+        rec["hlo_walk"]["wire_bytes_by_level"] = walk["wire_bytes_by_level"]
         if multi_pod:
             rec["hlo_walk"]["wire_bytes_intra"] = walk["wire_bytes_intra"]
             rec["hlo_walk"]["wire_bytes_inter"] = walk["wire_bytes_inter"]
@@ -115,7 +127,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
 
         terms = roofline_terms(walk["flops"], walk["hbm_bytes"],
                                walk["wire_bytes"],
-                               walk.get("wire_bytes_inter", 0.0))
+                               walk.get("wire_bytes_inter", 0.0),
+                               wire_bytes_by_level=walk["wire_bytes_by_level"],
+                               level_names=walk["level_names"])
         rec["roofline"] = terms
 
         # MODEL_FLOPS: useful-work basis. 6ND train, 2ND forward-only

@@ -3,9 +3,19 @@
 The loop-aware cost walk lives in hlo_cost.py; this module holds the
 hardware model and the three-term roofline (brief formulas: numerators are
 chip-totals, denominators carry the chip count — so per-device quantities
-divide by per-chip rates)."""
+divide by per-chip rates).
+
+The fabric is modeled per hierarchy *level*: chip-local ICI is the cheapest,
+host-scope ICI halves it, and the inter-pod DCI is the scarce top. A
+``wire_bytes_by_level`` vector from ``hlo_cost.analyze_hlo(level_sizes=...)``
+is charged at per-level rates via ``level_bandwidths`` /
+``collective_time_by_level``; the legacy intra/inter pair maps onto the
+(ICI, DCI) endpoints.
+"""
 
 from __future__ import annotations
+
+from typing import Optional, Sequence
 
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -14,23 +24,83 @@ DCI_BW = 12.5e9              # bytes/s per chip of inter-pod DCI budget
                              # (the data-center interconnect between pods is
                              # ~4x scarcer per chip than intra-pod ICI)
 
+# Named per-level rates (bytes/s per chip). Levels between chip-local ICI
+# and the DCI interpolate geometrically — each hop up the hierarchy halves
+# the per-chip budget, floored at the DCI rate.
+LEVEL_BW = {
+    "chip": ICI_BW,
+    "host": ICI_BW / 2,
+    "pod": DCI_BW,
+    "dci": DCI_BW / 4,
+}
+
+
+def level_bandwidths(n_levels: int,
+                     names: Optional[Sequence[str]] = None) -> list[float]:
+    """Per-level rates for an ``n_levels``-deep hierarchy, innermost first.
+
+    Known names resolve through ``LEVEL_BW``; anonymous levels fall off
+    geometrically from ICI (factor 2 per level), floored at the DCI rate,
+    with the top level always charged at DCI — the scarcest link class.
+    """
+    out = []
+    for i in range(n_levels):
+        name = names[i] if names is not None and i < len(names) else None
+        if name in LEVEL_BW:
+            out.append(LEVEL_BW[name])
+        elif i == n_levels - 1 and n_levels > 1:
+            out.append(DCI_BW)
+        else:
+            out.append(max(ICI_BW / (2 ** i), DCI_BW))
+    return out
+
+
+def collective_time_by_level(wire_bytes_by_level: Sequence[float],
+                             bws: Optional[Sequence[float]] = None,
+                             names: Optional[Sequence[str]] = None) -> dict:
+    """Charge a per-device per-level byte vector at per-level rates.
+
+    Returns ``{"collective_s", "by_level_s"}`` — the total is a sum, not a
+    max: the levels of one merge are sequential stages.
+    """
+    if bws is None:
+        bws = level_bandwidths(len(wire_bytes_by_level), names)
+    by_level = [b / bw for b, bw in zip(wire_bytes_by_level, bws)]
+    return {"collective_s": sum(by_level), "by_level_s": by_level}
+
 
 def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
                    wire_bytes_per_device: float,
-                   wire_bytes_inter_per_device: float = 0.0) -> dict:
-    """Three-term roofline; ``wire_bytes_inter_per_device`` (a subset of
-    ``wire_bytes_per_device``) is charged at DCI instead of ICI bandwidth —
-    the hierarchy-aware collective term for multi-pod meshes."""
-    wire_intra = max(0.0, wire_bytes_per_device - wire_bytes_inter_per_device)
+                   wire_bytes_inter_per_device: float = 0.0,
+                   wire_bytes_by_level: Optional[Sequence[float]] = None,
+                   level_names: Optional[Sequence[str]] = None) -> dict:
+    """Three-term roofline.
+
+    With ``wire_bytes_by_level`` (per-device, innermost first) the
+    collective term charges each hierarchy level at its own rate
+    (``level_bandwidths``). Otherwise ``wire_bytes_inter_per_device`` (a
+    subset of ``wire_bytes_per_device``) is charged at DCI instead of ICI —
+    the legacy two-level split.
+    """
+    if wire_bytes_by_level is not None:
+        lv = collective_time_by_level(wire_bytes_by_level,
+                                      names=level_names)
+        collective_s = lv["collective_s"]
+    else:
+        wire_intra = max(0.0,
+                         wire_bytes_per_device - wire_bytes_inter_per_device)
+        collective_s = (wire_intra / ICI_BW
+                        + wire_bytes_inter_per_device / DCI_BW)
     terms = {
         "compute_s": flops_per_device / PEAK_FLOPS,
         "memory_s": hbm_bytes_per_device / HBM_BW,
-        "collective_s": (wire_intra / ICI_BW
-                         + wire_bytes_inter_per_device / DCI_BW),
+        "collective_s": collective_s,
     }
     dom = max(terms, key=terms.get)
     bound = terms[dom]
-    total = max(terms.values())
     frac = terms["compute_s"] / max(bound, 1e-30)
-    return {**terms, "dominant": dom.replace("_s", ""), "bound_s": bound,
-            "compute_fraction_of_bound": frac}
+    out = {**terms, "dominant": dom.replace("_s", ""), "bound_s": bound,
+           "compute_fraction_of_bound": frac}
+    if wire_bytes_by_level is not None:
+        out["collective_by_level_s"] = lv["by_level_s"]
+    return out

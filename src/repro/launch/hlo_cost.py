@@ -16,14 +16,19 @@ multipliers by walking the HLO call graph from ENTRY:
     collective-permute 1 x B
 All quantities are per-device (the module is the per-device SPMD program).
 
-With ``intra_group_size`` (devices per hierarchy group, e.g. 256 = one pod
-of the pod2x16x16 mesh), collective traffic is additionally classified by
-*level*: bytes whose source and destination share a device-group are intra
-(cheap ICI); bytes crossing a group boundary are inter (expensive DCI).
-collective-permutes classify per source->target pair (self-pairs are free);
-replica-group collectives use the ring model — links between consecutive
-sorted members, crossing links are inter. Level totals are machine-wide;
-``wire_bytes_intra``/``wire_bytes_inter`` are per-device averages.
+With ``level_sizes`` (per-level fanouts innermost first, e.g. ``(16, 16, 2)``
+for a chip/host/pod hierarchy covering 512 devices), collective traffic is
+classified into a *vector* of per-level bytes: a link between devices in the
+same innermost block is level 0 (cheapest links); a link crossing the
+level-i boundary but staying within level i+1 is level i. collective-permutes
+classify per source->target pair (self-pairs are free); replica-group
+collectives use the ring model — links between consecutive sorted members,
+each classified by the boundary it crosses. Level totals are machine-wide;
+``wire_bytes_by_level`` is the per-device average vector.
+
+``intra_group_size`` is the two-level special case kept for callers that
+only care about the intra/inter (ICI/DCI) split; it reports
+``wire_bytes_intra``/``wire_bytes_inter`` exactly as before.
 """
 
 from __future__ import annotations
@@ -248,51 +253,62 @@ def _parse_replica_groups(attrs: str) -> Optional[list[list[int]]]:
     return None
 
 
-def _ring_inter_fraction(group: list[int], gsize: int) -> float:
-    """Fraction of a replica group's ring links that cross device-groups."""
+def _link_level(s: int, t: int, bounds: list[int]) -> int:
+    """Hierarchy level of a directed link: 0 if both ends share the
+    innermost block, i if they first meet at the level-i block, top
+    otherwise. ``bounds`` are the block sizes B_1..B_{N-1}."""
+    for i, b in enumerate(bounds):
+        if s // b == t // b:
+            return i
+    return len(bounds)
+
+
+def _ring_level_fractions(group: list[int], bounds: list[int]) -> list[float]:
+    """Per-level fraction of a replica group's ring links."""
+    n_levels = len(bounds) + 1
     if len(group) < 2:
-        return 0.0
+        return [0.0] * n_levels
     ring = sorted(group)
     links = list(zip(ring, ring[1:] + ring[:1]))
-    crossing = sum(1 for a, b in links if a // gsize != b // gsize)
-    return crossing / len(links)
+    counts = [0] * n_levels
+    for a, b in links:
+        counts[_link_level(a, b, bounds)] += 1
+    return [c / len(links) for c in counts]
 
 
-def _classify_collective(instr: Instr, rbytes: int,
-                         intra_group_size: int,
-                         num_partitions: int) -> tuple[float, float]:
-    """Machine-wide (intra_bytes, inter_bytes) for one collective."""
+def _classify_collective(instr: Instr, rbytes: int, bounds: list[int],
+                         num_partitions: int) -> list[float]:
+    """Machine-wide per-level byte vector for one collective."""
+    n_levels = len(bounds) + 1
+    vec = [0.0] * n_levels
     base = instr.op.replace("-start", "")
     if base == "collective-permute":
         m = _PAIRS_RE.search(instr.attrs)
         if not m:
-            return float(rbytes * num_partitions), 0.0
-        intra = inter = 0.0
+            vec[0] = float(rbytes * num_partitions)
+            return vec
         for s, t in _PAIR_RE.findall(m.group(1)):
             s, t = int(s), int(t)
             if s == t:
                 continue  # self-copy never leaves the chip
-            if s // intra_group_size == t // intra_group_size:
-                intra += rbytes
-            else:
-                inter += rbytes
-        return intra, inter
+            vec[_link_level(s, t, bounds)] += rbytes
+        return vec
     groups = _parse_replica_groups(instr.attrs)
     if groups is None:
         groups = [list(range(num_partitions))]
-    intra = inter = 0.0
     for grp in groups:
         g = max(1, len(grp))
         total = g * _wire_bytes(instr.op, rbytes, g)
-        frac = _ring_inter_fraction(grp, intra_group_size)
-        inter += total * frac
-        intra += total * (1.0 - frac)
-    return intra, inter
+        for lvl, frac in enumerate(_ring_level_fractions(grp, bounds)):
+            vec[lvl] += total * frac
+    return vec
 
 
 class CostResult:
     def __init__(self, intra_group_size: Optional[int] = None,
-                 num_partitions: int = 1):
+                 num_partitions: int = 1,
+                 level_sizes: Optional[tuple] = None,
+                 level_names: Optional[tuple] = None):
         self.flops = 0.0
         self.hbm_bytes = 0.0
         self.wire_bytes = 0.0
@@ -300,8 +316,23 @@ class CostResult:
         self.trip_counts: list[int] = []
         self.intra_group_size = intra_group_size
         self.num_partitions = num_partitions
-        self.wire_bytes_intra_total = 0.0
-        self.wire_bytes_inter_total = 0.0
+        self.level_sizes = tuple(level_sizes) if level_sizes else None
+        self.level_names = tuple(level_names) if level_names else None
+        # Internal block-size bounds B_1..B_{N-1}; the 2-level intra/inter
+        # split is the bounds=[group_size] special case.
+        if self.level_sizes:
+            bounds, acc = [], 1
+            for s in self.level_sizes[:-1]:
+                acc *= s
+                bounds.append(acc)
+            self.bounds: Optional[list[int]] = bounds
+        elif intra_group_size is not None:
+            self.bounds = [intra_group_size]
+        else:
+            self.bounds = None
+        self.wire_bytes_by_level_total = (
+            [0.0] * (len(self.bounds) + 1) if self.bounds is not None
+            else None)
 
     def as_dict(self) -> dict:
         out = {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
@@ -309,13 +340,30 @@ class CostResult:
                "per_collective": self.per_collective,
                "trip_counts": sorted(set(self.trip_counts), reverse=True),
                "num_partitions": self.num_partitions}
+        n = max(1, self.num_partitions)
+        if self.level_sizes:
+            out["level_sizes"] = list(self.level_sizes)
+            names = (list(self.level_names) if self.level_names
+                     else [f"level{i}" for i in range(len(self.level_sizes))])
+            out["level_names"] = names
+            out["wire_bytes_by_level_total"] = list(
+                self.wire_bytes_by_level_total)
+            out["wire_bytes_by_level"] = [
+                b / n for b in self.wire_bytes_by_level_total]
         if self.intra_group_size is not None:
-            n = max(1, self.num_partitions)
+            # Two-level view: a bucket is intra iff its containing block
+            # fits inside the intra group (bucket i spans links within
+            # bounds[i]; the top bucket crosses the last bound).
+            totals = self.wire_bytes_by_level_total
+            intra = sum(t for i, t in enumerate(totals)
+                        if i < len(self.bounds)
+                        and self.bounds[i] <= self.intra_group_size)
+            inter = sum(totals) - intra
             out["intra_group_size"] = self.intra_group_size
-            out["wire_bytes_intra_total"] = self.wire_bytes_intra_total
-            out["wire_bytes_inter_total"] = self.wire_bytes_inter_total
-            out["wire_bytes_intra"] = self.wire_bytes_intra_total / n
-            out["wire_bytes_inter"] = self.wire_bytes_inter_total / n
+            out["wire_bytes_intra_total"] = intra
+            out["wire_bytes_inter_total"] = inter
+            out["wire_bytes_intra"] = intra / n
+            out["wire_bytes_inter"] = inter / n
         return out
 
 
@@ -487,27 +535,48 @@ def _visit(comp: Computation, comps: dict[str, Computation], mult: float,
             d["result_bytes"] += mult * rbytes
             d["wire_bytes"] += mult * wire
             res.wire_bytes += mult * wire
-            if res.intra_group_size is not None:
-                intra, inter = _classify_collective(
-                    instr, rbytes, res.intra_group_size, res.num_partitions)
-                d["wire_bytes_intra_total"] = \
-                    d.get("wire_bytes_intra_total", 0.0) + mult * intra
-                d["wire_bytes_inter_total"] = \
-                    d.get("wire_bytes_inter_total", 0.0) + mult * inter
-                res.wire_bytes_intra_total += mult * intra
-                res.wire_bytes_inter_total += mult * inter
+            if res.bounds is not None:
+                vec = _classify_collective(instr, rbytes, res.bounds,
+                                           res.num_partitions)
+                dl = d.setdefault("wire_bytes_by_level_total",
+                                  [0.0] * len(vec))
+                for lvl, b in enumerate(vec):
+                    dl[lvl] += mult * b
+                    res.wire_bytes_by_level_total[lvl] += mult * b
+                if res.intra_group_size is not None:
+                    intra = sum(t for lvl, t in enumerate(dl)
+                                if lvl < len(res.bounds)
+                                and res.bounds[lvl] <= res.intra_group_size)
+                    d["wire_bytes_intra_total"] = intra
+                    d["wire_bytes_inter_total"] = sum(dl) - intra
 
         if count_memory and op not in _SKIP_MEMORY:
             res.hbm_bytes += mult * _instr_memory_bytes(instr, comp)
 
 
-def analyze_hlo(text: str, intra_group_size: Optional[int] = None) -> dict:
-    """Walk the HLO module; with ``intra_group_size`` also classify
-    collective bytes into intra-/inter-group hierarchy levels."""
+def analyze_hlo(text: str, intra_group_size: Optional[int] = None,
+                level_sizes: Optional[tuple] = None,
+                level_names: Optional[tuple] = None) -> dict:
+    """Walk the HLO module; with ``level_sizes`` (per-level fanouts,
+    innermost first) classify collective bytes into the per-level hierarchy
+    vector ``wire_bytes_by_level``; ``intra_group_size`` is the two-level
+    intra/inter shorthand."""
     comps, entry = parse_module(text)
     m = _NUM_PARTITIONS_RE.search(text)
+    num_partitions = int(m.group(1)) if m else 1
+    if level_sizes and num_partitions > 1:
+        covered = 1
+        for s in level_sizes:
+            covered *= s
+        if covered != num_partitions:
+            raise ValueError(
+                f"level_sizes {tuple(level_sizes)} cover {covered} devices "
+                f"but the module has num_partitions={num_partitions}; a "
+                f"mismatched hierarchy would silently misclassify every "
+                f"collective byte")
     res = CostResult(intra_group_size=intra_group_size,
-                     num_partitions=int(m.group(1)) if m else 1)
+                     num_partitions=num_partitions,
+                     level_sizes=level_sizes, level_names=level_names)
     if entry is not None:
         _visit(comps[entry], comps, 1.0, res, count_memory=True)
     return res.as_dict()

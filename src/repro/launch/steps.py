@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.ccache import MergeTopology
+from repro.core.ccache import Topology
 from repro.core.grad_merge import merge_gradients, microbatched_value_and_grad
 from repro.core.merge_functions import ADD, int8_compressed_add
 from repro.models.module import split_params
@@ -95,19 +95,43 @@ def opt_state_axes(opt_specs: OptState, param_axes: PyTree) -> OptState:
 # ---------------------------------------------------------------------------
 
 
+def merge_axes_for(mesh: Mesh, topology: Optional[Topology]):
+    """The mesh axes a gradient-merge topology reduces over.
+
+    A topology pinned to an axis (string or tuple of mesh axes) wins;
+    otherwise the data-parallel axes of the mesh — ``("pod", "data")`` on
+    the multi-pod production mesh, treated by the engine as one flattened
+    merge axis, plain ``"data"`` elsewhere.
+    """
+    axis = getattr(topology, "axis_name", None)
+    if axis is None:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        axis = dp[0] if len(dp) == 1 else (dp or "data")
+    return axis
+
+
 def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
                     mesh: Optional[Mesh] = None,
-                    merge_topology: Optional[MergeTopology] = None,
+                    merge_topology: Optional[Topology] = None,
                     merge_compress: bool = False):
     """Build the train step.
 
     Default: implicit gradient reduction — XLA inserts the collectives the
-    output shardings demand. With ``merge_topology`` (and a ``mesh``), the
+    output shardings demand. With ``merge_topology`` (a two-level
+    ``MergeTopology`` or an N-level ``MergePlan``) and a ``mesh``, the
     gradient merge is *explicit*: per-shard grads are computed under
-    ``shard_map`` over the topology's axis and reconciled by the CCache
-    hierarchical engine (intra-group fused collective, representative-only
-    inter-group exchange, optionally compressed). Params must be replicated
-    on that axis — this is the data-parallel/host path, not the FSDP path.
+    ``shard_map`` manual over the merge axes and reconciled by the CCache
+    hierarchical engine (fused innermost collective, representative-only or
+    lane-parallel upper-level exchange, optionally compressed). Plans with
+    ``defer`` levels are rejected: the optimizer consumes the merged
+    gradient every step, so deferring a level would silently train on
+    partially-merged gradients — merge-on-evict belongs to the ccache
+    ``soft_merge``/``commit_deferred`` API, not this path. All remaining
+    mesh axes (tensor/model parallelism)
+    stay on the compiler via shard_map's ``auto`` set, which is what lets
+    the same step serve the implicit ``plan_train`` path — params keep
+    their model-axis sharding and must be replicated over the merge axes
+    only (the data-parallel path, not the FSDP path).
     """
 
     def loss_fn(params, batch):
@@ -121,14 +145,39 @@ def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
 
     if merge_topology is not None:
         assert mesh is not None, "explicit merge needs the mesh"
+        if getattr(merge_topology, "has_deferred", False):
+            raise ValueError(
+                "merge plans with defer levels are not valid for the "
+                "gradient merge: the optimizer needs the fully merged "
+                "gradient every step. Use soft_merge/commit_deferred for "
+                "merge-on-evict workloads, or drop the :defer flags.")
         from jax.experimental.shard_map import shard_map
 
-        axis = merge_topology.axis_name or "data"
+        axis = merge_axes_for(mesh, merge_topology)
+        axes_set = set(axis) if isinstance(axis, tuple) else {axis}
+        auto = frozenset(mesh.axis_names) - axes_set
+        nontrivial_auto = [a for a in auto if mesh.shape[a] > 1]
+        if nontrivial_auto:
+            # Partial-auto shard_map over this repo's models (embedding
+            # gather under involuntary remat) aborts the pinned jax
+            # 0.4.37's SPMD partitioner with a *fatal* IsManualSubgroup
+            # check — fail loudly here instead of crashing the process.
+            raise NotImplementedError(
+                f"explicit hierarchical gradient merge needs the non-merge "
+                f"mesh axes to be trivial, but {sorted(nontrivial_auto)} "
+                f"have size > 1; XLA on jax 0.4.37 cannot partition this "
+                f"model under partial-auto shard_map (fatal "
+                f"IsManualSubgroup). Use a pure data-parallel mesh for the "
+                f"merge plan, or the implicit XLA reduction for "
+                f"tensor-parallel cells.")
         grad_merge_fn = int8_compressed_add() if merge_compress else ADD
 
         def sharded_grads(params, batch):
             def shard_fn(params, batch):
-                loss, grads = grads_of(params, batch)
+                # Model-code sharding constraints must not name the manual
+                # (merge) axes — values are per-shard local along them.
+                with partition.manual_axes(axes_set):
+                    loss, grads = grads_of(params, batch)
                 grads = merge_gradients(grads, axis,
                                         merge_fn=grad_merge_fn,
                                         topology=merge_topology,
@@ -138,7 +187,7 @@ def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
             return shard_map(shard_fn, mesh=mesh,
                              in_specs=(P(), P(axis)),
                              out_specs=(P(), P()),
-                             check_rep=False)(params, batch)
+                             check_rep=False, auto=auto)(params, batch)
 
         grad_step = sharded_grads
     else:
@@ -173,7 +222,20 @@ class LoweredPlan:
 
 def plan_train(cfg, shape_cfg, mesh: Mesh,
                num_microbatches: Optional[int] = None,
-               extra_rules: Optional[dict] = None) -> LoweredPlan:
+               extra_rules: Optional[dict] = None,
+               merge_plan: Optional[Topology] = None,
+               merge_compress: bool = False) -> LoweredPlan:
+    """Build the implicit production train plan.
+
+    With ``merge_plan`` the data-parallel gradient reduction inside the
+    otherwise-implicit step is routed through the CCache hierarchical
+    engine (shard_map manual over the dp axes) instead of the XLA-inserted
+    all-reduce — the N-level MergePlan threaded into the production path,
+    not just the explicit shard_map step. Restriction on the pinned jax
+    0.4.37: every non-merge mesh axis must have size 1 (pure data-parallel
+    meshes) — ``make_train_step`` raises on tensor-parallel cells, which
+    keep the implicit XLA reduction until the jax upgrade.
+    """
     model = build_model(cfg)
     rules = lowering_rules(cfg, shape_cfg, mesh)
     rules.update(extra_rules or {})
@@ -199,7 +261,9 @@ def plan_train(cfg, shape_cfg, mesh: Mesh,
     batch_sh = axes_to_shardings(model.input_axes(shape_cfg), batch_specs,
                                  mesh, rules)
 
-    step = make_train_step(model, cfg, optimizer, nmb)
+    step = make_train_step(model, cfg, optimizer, nmb, mesh=mesh,
+                           merge_topology=merge_plan,
+                           merge_compress=merge_compress)
     metrics_sh = NamedSharding(mesh, P())
     out_sh = (state_sh, {"loss": metrics_sh, "grad_norm": metrics_sh,
                          "lr": metrics_sh})

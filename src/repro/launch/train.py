@@ -42,10 +42,23 @@ def main() -> None:
     p.add_argument("--merge-group-size", type=int, default=0,
                    help="explicit hierarchical gradient merge: devices per "
                         "intra-group level on the data axis (0 = implicit "
-                        "XLA reduction)")
+                        "XLA reduction); two-level shorthand for "
+                        "--merge-topology")
+    p.add_argument("--merge-topology", default="",
+                   help="N-level MergePlan over the data-parallel axes, "
+                        "innermost level first: 'chip:4,host:16,pod:2' "
+                        "(level flags: :compress :software; the product of "
+                        "sizes must equal the data-parallel device count; "
+                        ":defer is rejected here — gradients must merge "
+                        "fully every step)")
+    p.add_argument("--merge-lane-parallel", action="store_true",
+                   help="shard the representative role over each unit's "
+                        "lanes so upper-level exchanges bandwidth-"
+                        "parallelize (requires --merge-topology)")
     p.add_argument("--merge-compress", action="store_true",
-                   help="int8-compress the inter-group gradient exchange "
-                        "(requires --merge-group-size)")
+                   help="int8-compress the outermost-level gradient "
+                        "exchange (requires --merge-group-size or "
+                        "--merge-topology)")
     p.add_argument("--lr", type=float, default=3e-4)
     p.add_argument("--warmup", type=int, default=20)
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -67,8 +80,15 @@ def main() -> None:
     optimizer = make_optimizer(
         cfg, warmup_cosine(args.lr, args.warmup, args.steps))
     topology = None
-    if args.merge_compress and not args.merge_group_size:
-        raise SystemExit("--merge-compress requires --merge-group-size")
+    if args.merge_group_size and args.merge_topology:
+        raise SystemExit("--merge-group-size and --merge-topology are "
+                         "mutually exclusive")
+    if args.merge_compress and not (args.merge_group_size
+                                    or args.merge_topology):
+        raise SystemExit("--merge-compress requires --merge-group-size or "
+                         "--merge-topology")
+    if args.merge_lane_parallel and not args.merge_topology:
+        raise SystemExit("--merge-lane-parallel requires --merge-topology")
     if args.merge_group_size:
         from repro.core.ccache import MergeTopology
         dp = mesh.shape.get("data", 1)
@@ -78,6 +98,29 @@ def main() -> None:
                 f"the data axis ({dp} devices)")
         topology = MergeTopology(group_size=args.merge_group_size,
                                  axis_name="data")
+    elif args.merge_topology:
+        from repro.core.merge_plan import MergePlan
+        from repro.launch.steps import merge_axes_for
+        try:
+            topology = MergePlan.parse(
+                args.merge_topology,
+                lane_parallel=args.merge_lane_parallel)
+        except ValueError as e:
+            raise SystemExit(f"--merge-topology: {e}")
+        axes = merge_axes_for(mesh, topology)
+        dp = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            dp *= mesh.shape.get(a, 1)
+        try:
+            topology.validate(dp)
+        except ValueError as e:
+            raise SystemExit(f"--merge-topology: {e} "
+                             f"(data-parallel axes {axes})")
+        if topology.has_deferred:
+            raise SystemExit(
+                "--merge-topology: :defer levels are not valid for the "
+                "gradient merge (the optimizer needs the fully merged "
+                "gradient every step); drop the :defer flags")
     step_fn = make_train_step(model, cfg, optimizer, args.microbatches,
                               mesh=mesh, merge_topology=topology,
                               merge_compress=args.merge_compress)

@@ -42,6 +42,7 @@ class _Ctx(threading.local):
     def __init__(self):
         self.rules: Optional[dict] = None
         self.mesh: Optional[Mesh] = None
+        self.manual: frozenset = frozenset()
 
 
 _CTX = _Ctx()
@@ -124,9 +125,37 @@ def params_shardings(param_axes: Any, param_shapes: Any, mesh: Mesh,
         is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x))
 
 
+@contextlib.contextmanager
+def manual_axes(axes):
+    """Mark mesh axes as shard_map-manual for the enclosed trace.
+
+    Inside a shard_map manual region, per-shard values are *local* along
+    the manual axes: a with_sharding_constraint naming them is rejected by
+    jax. Model code doesn't know which axes the launch layer went manual
+    over, so the explicit-merge train step installs this context and
+    ``logical_constraint`` suppresses every constraint while it is active
+    (on the pinned jax 0.4.37 even auto-axis constraints fatally abort the
+    SPMD partitioner — when a jax upgrade lifts that, this can relax to
+    masking only the manual axes out of resolved specs).
+    """
+    prev = _CTX.manual
+    _CTX.manual = prev | frozenset(axes)
+    try:
+        yield
+    finally:
+        _CTX.manual = prev
+
+
 def logical_constraint(x: jax.Array, axes: tuple) -> jax.Array:
     """with_sharding_constraint by logical axes; no-op outside a rules ctx."""
     if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    if _CTX.manual:
+        # No constraints inside a shard_map manual region: naming a manual
+        # axis is rejected outright, and on jax 0.4.37 even an auto-axis
+        # NamedSharding constraint trips the SPMD partitioner's
+        # IsManualSubgroup check. The auto axes' layout follows the operand
+        # shardings instead.
         return x
     spec = spec_for(x.shape, axes, _CTX.mesh, _CTX.rules)
     return jax.lax.with_sharding_constraint(

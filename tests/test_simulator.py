@@ -118,3 +118,57 @@ def test_ccache_beats_fgl_on_contended_counter():
     r_fgl = _run(fgl_core, fgl_op, fgl_line)
     r_cc = _run(cc_core, cc_op, cc_line)
     assert r_cc["cycles_max"] * 2 < r_fgl["cycles_max"]
+
+
+# --------------------------------------------------------------------------
+# Multi-level fabric model (the MergePlan IR's analytic counterpart)
+# --------------------------------------------------------------------------
+
+
+def test_fabric_top_level_reduction_matches_group_factor():
+    from benchmarks.simulator import default_fabric
+    fab = default_fabric()
+    payload = 1 << 20
+    flat = fab.flat_merge(payload)
+    for lane in (False, True):
+        hier = fab.hierarchical_merge(payload, lane_parallel=lane)
+        # Top-level bytes shrink by the pod stride (16*16=256): the rep (or
+        # chunked-lane) exchange moves one contribution per pod, not 512.
+        assert flat["bytes_by_level"][-1] / hier["bytes_by_level"][-1] == 256
+        # The per-level byte vector is monotone: cheaper links carry more.
+        bl = hier["bytes_by_level"]
+        assert bl[0] >= bl[1] >= bl[2]
+
+
+def test_fabric_lane_parallel_is_faster_same_bytes():
+    from benchmarks.simulator import default_fabric
+    fab = default_fabric()
+    payload = 1 << 20
+    rep = fab.hierarchical_merge(payload, lane_parallel=False)
+    lane = fab.hierarchical_merge(payload, lane_parallel=True)
+    # Same wire bytes at every level; the lane-sharded exchange drives the
+    # expensive links with every rank instead of one rep per unit.
+    assert rep["bytes_by_level"] == lane["bytes_by_level"]
+    assert lane["time_s"] < rep["time_s"]
+
+
+def test_fabric_defer_amortizes_top_level_by_k():
+    from benchmarks.simulator import default_fabric
+    fab = default_fabric()
+    payload = 1 << 20
+    eager = fab.hierarchical_merge(payload, lane_parallel=True)
+    k = 8
+    deferred = fab.hierarchical_merge(payload, lane_parallel=True,
+                                      defer_levels=1, commit_every=k)
+    assert deferred["bytes_by_level"][-1] * k == eager["bytes_by_level"][-1]
+    assert deferred["bytes_by_level"][:-1] == eager["bytes_by_level"][:-1]
+    assert deferred["time_s"] < eager["time_s"]
+
+
+def test_fabric_hier_beats_flat():
+    from benchmarks.simulator import default_fabric
+    fab = default_fabric()
+    payload = 1 << 22
+    flat = fab.flat_merge(payload)
+    hier = fab.hierarchical_merge(payload, lane_parallel=True)
+    assert hier["time_s"] < flat["time_s"]
