@@ -15,11 +15,12 @@ CSV metrics:
 
 from __future__ import annotations
 
-import json
 import os
 import subprocess
 import sys
 import time
+
+from benchmarks.records import emit_record, iter_records
 
 
 def _sub(mode: str) -> list[dict]:
@@ -34,11 +35,7 @@ def _sub(mode: str) -> list[dict]:
         env=env, capture_output=True, text=True, timeout=900)
     if out.returncode != 0:
         return [{"bench": mode, "error": out.stderr[-400:]}]
-    rows = []
-    for line in out.stdout.splitlines():
-        if line.startswith("{"):
-            rows.append(json.loads(line))
-    return rows
+    return list(iter_records(out.stdout.splitlines()))
 
 
 def bench_merge_paths() -> list[dict]:
@@ -122,12 +119,12 @@ def _merges_main() -> None:
             r = f(x)
         jax.block_until_ready(r)
         wall = (time.time() - t0) / 5 * 1e6
-        print(json.dumps({
+        emit_record({
             "bench": "merge_path", "case": name,
             "wire_bytes_per_device": walk["wire_bytes"],
             "collectives": {k: v["count"]
                             for k, v in walk["per_collective"].items()},
-            "wall_us_8cpudev": round(wall, 1)}))
+            "wall_us_8cpudev": round(wall, 1)})
 
 
 def _accum_main() -> None:
@@ -162,12 +159,12 @@ def _accum_main() -> None:
             {"x": shard, "y": shard}))
         compiled = f.lower(params, batch).compile()
         walk = hlo_cost.analyze_hlo(compiled.as_text())
-        print(json.dumps({
+        emit_record({
             "bench": "grad_accum", "microbatches": n_micro,
             "wire_bytes_per_device": walk["wire_bytes"],
             "collectives": {k: v["count"]
                             for k, v in walk["per_collective"].items()},
-            "note": "soft-merge defers: one cross-device merge per step"}))
+            "note": "soft-merge defers: one cross-device merge per step"})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""Tagged JSON record stream for the benchmark harness.
+
+The CI gate (``scripts/ci.sh``) pipes ``benchmarks.run`` into
+``scripts/check_level_costs.py``, and benchmark runners re-parse their
+subprocesses' stdout. Bare ``print(json.dumps(...))`` rows made every one of
+those consumers grep for lines starting with ``{`` — which any stray log
+line (jax warnings, XLA dumps, a debugging print that happens to open a
+brace) could break or poison. Records therefore carry an explicit tag:
+
+    @repro-bench {"bench": "hierarchy", ...}
+
+``emit_record`` writes one, ``parse_record``/``iter_records`` read them
+back, and every non-record line is passed through untouched and ignored.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, Iterator, Optional
+
+RECORD_TAG = "@repro-bench"
+
+
+def emit_record(row: dict) -> None:
+    print(f"{RECORD_TAG} {json.dumps(row)}", flush=True)
+
+
+def parse_record(line: str) -> Optional[dict]:
+    s = line.strip()
+    if not s.startswith(RECORD_TAG):
+        return None
+    try:
+        rec = json.loads(s[len(RECORD_TAG):])
+    except json.JSONDecodeError:
+        return None
+    return rec if isinstance(rec, dict) else None
+
+
+def iter_records(lines: Iterable[str]) -> Iterator[dict]:
+    for line in lines:
+        rec = parse_record(line)
+        if rec is not None:
+            yield rec

@@ -2,9 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6,...]
 
-Emits CSV-ish JSON rows; summary derivations at the end mirror the paper's
-headline claims (CCache speedup over FGL/DUP, half-LLC result, memory
-overheads, merge-on-evict reductions).
+Emits tagged JSON records (``benchmarks.records``: ``@repro-bench {...}``
+lines, so CI consumers like scripts/check_level_costs.py can ignore stray
+log output); summary derivations at the end mirror the paper's headline
+claims (CCache speedup over FGL/DUP, half-LLC result, memory overheads,
+merge-on-evict reductions).
 """
 
 from __future__ import annotations
@@ -13,10 +15,12 @@ import argparse
 import json
 import time
 
+from benchmarks.records import emit_record
+
 
 def _emit(rows: list[dict]) -> None:
     for r in rows:
-        print(json.dumps(r))
+        emit_record(r)
 
 
 def main() -> None:
@@ -99,6 +103,12 @@ def main() -> None:
         if amort and amort.get("top_level_amortization_x"):
             summary["hier3_defer_amortization_x"] = \
                 amort["top_level_amortization_x"]
+        auto = next((r for r in rows
+                     if r.get("case") == "hier3_defer_auto"), None)
+        if auto and auto.get("commit_every"):
+            summary["hier3_defer_auto_k"] = auto["commit_every"]
+            summary["hier3_defer_auto_measured_x"] = \
+                auto.get("top_level_amortization_x")
 
     if want("fabric"):
         from benchmarks.simulator import default_fabric
@@ -144,6 +154,7 @@ def main() -> None:
         _emit(bench_cscatter())
 
     summary["wall_s"] = round(time.time() - t0, 1)
+    emit_record({"summary": summary})
     print(json.dumps({"summary": summary}, indent=1))
 
 

@@ -1,24 +1,33 @@
 #!/usr/bin/env python
 """CI guard over the hierarchy dryrun's per-level wire-byte vectors.
 
-Reads the benchmark JSON stream on stdin (passed through unchanged), finds
-the 3-level hierarchy rows, and asserts the cost-model invariants the
-MergePlan engine is built on:
+Reads the benchmark record stream on stdin (passed through unchanged),
+collects the tagged ``@repro-bench {...}`` JSON records (``benchmarks/
+records.py`` — anything else, including stray jax/XLA log lines, is
+ignored), finds the 3-level hierarchy rows, and asserts the cost-model
+invariants the MergePlan engine is built on:
 
 1. monotonicity — the hierarchical merge puts monotonically more bytes on
    monotonically cheaper levels (chip >= host >= pod);
 2. top-level reduction — the pod level carries at least group/2 fewer bytes
    than the flat butterfly's (the representative/lane exchange working);
 3. defer amortization — the merge-on-evict commit amortizes top-level
-   traffic by at least half the commit interval.
+   traffic by at least half the commit interval;
+4. defer schedule — the roofline-solved commit interval (hier3_defer_auto)
+   is a real deferral (K >= 2 under the congested-DCI scenario) and the
+   measured top-level amortization realizes >= 80% of the predicted ~K-fold.
 
-A regression in the classifier (hlo_cost), the permutes, or the engine's
-stage compilation breaks one of these long before it breaks correctness
-tests — this is the cost model's canary.
+A regression in the classifier (hlo_cost), the permutes, the engine's
+stage compilation, or the defer-schedule solver breaks one of these long
+before it breaks correctness tests — this is the cost model's canary.
 """
 
-import json
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.records import parse_record  # noqa: E402
 
 
 def fail(msg: str) -> None:
@@ -30,15 +39,12 @@ def main() -> None:
     rows = []
     for line in sys.stdin:
         print(line, end="")  # pass the stream through for the log
-        line = line.strip()
-        if line.startswith("{"):
-            try:
-                rows.append(json.loads(line))
-            except json.JSONDecodeError:
-                pass
+        rec = parse_record(line)
+        if rec is not None:
+            rows.append(rec)
     hier = {r.get("case"): r for r in rows if r.get("bench") == "hierarchy"}
     required = ("flat_butterfly", "hier3_rep", "hier3_lane",
-                "hier3_defer_amortized")
+                "hier3_defer_amortized", "hier3_defer_auto")
     missing = [c for c in required if c not in hier]
     if missing:
         fail(f"missing hierarchy cases {missing} "
@@ -65,9 +71,23 @@ def main() -> None:
     if x < k / 2:
         fail(f"deferred commit amortizes top level {x}x < K/2 = {k / 2}")
 
+    auto = hier["hier3_defer_auto"]
+    k_auto = auto.get("commit_every", 0)
+    if k_auto < 2:
+        fail(f"defer schedule solved K={k_auto} under the congested-DCI "
+             f"scenario; the solver no longer defers when the top level "
+             f"dominates")
+    x_auto = auto.get("top_level_amortization_x") or 0
+    if x_auto < 0.8 * k_auto:
+        fail(f"auto schedule K={k_auto} but measured top-level "
+             f"amortization {x_auto}x < 0.8*K; realized commit traffic "
+             f"does not match the solver's prediction "
+             f"(predicted {auto.get('predicted_amortization_x')}x)")
+
     print(f"check_level_costs: OK (top-level reduction "
           f"{flat[-1] / hier['hier3_lane']['wire_bytes_by_level_total'][-1]:.0f}x, "
-          f"defer amortization {x}x/K={k})", file=sys.stderr)
+          f"defer amortization {x}x/K={k}, "
+          f"auto schedule K={k_auto} -> {x_auto}x)", file=sys.stderr)
 
 
 if __name__ == "__main__":

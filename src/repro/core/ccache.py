@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional, Union
+from typing import Any, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +85,12 @@ def tree_merge(update: PyTree, axis_name, merge: MergeFn,
     all_gather + local fold. With ``compress`` and a merge that defines
     encode/decode, each round exchanges the compressed wire format.
     """
+    if compress and (merge.encode is None or merge.decode is None):
+        raise ValueError(
+            f"compress=True but merge {merge.name!r} defines no "
+            f"encode/decode wire format — the exchange would silently stay "
+            f"uncompressed; use a codec merge (e.g. int8_compressed_add) or "
+            f"drop compress")
     size = compat.axis_size(axis_name)
     if not permutes.is_pow2(size):  # non-power-of-two fallback
         gathered = lax.all_gather(update, axis_name, axis=0, tiled=False)
@@ -95,7 +101,7 @@ def tree_merge(update: PyTree, axis_name, merge: MergeFn,
             return acc
         return jax.tree.map(_fold, gathered)
 
-    if compress and merge.encode is not None:
+    if compress:
         leaves, treedef = jax.tree.flatten(update)
         step = 1
         while step < size:
@@ -485,7 +491,7 @@ def hierarchical_merge(update: PyTree, axis_name, merge: MergeFn,
         # Degenerate: every rank is its own group -> flat dispatch.
         return reduce_update(update, axis_name, merge, compress=compress,
                              force_tree=force_tree)
-    stages = compile_plan(plan, size)
+    stages = compile_plan(plan, size, merge_fn=merge)
     return _run_stages(update, axis_name, merge, stages, size, force_tree)
 
 
@@ -505,8 +511,27 @@ def partial_merge(update: PyTree, axis_name, merge: MergeFn,
         return update if size == 1 else reduce_update(
             update, axis_name, merge, compress=compress,
             force_tree=force_tree)
-    eager, _ = split_eager_deferred(compile_plan(plan, size))
+    eager, _ = split_eager_deferred(compile_plan(plan, size, merge_fn=merge))
     return _run_stages(update, axis_name, merge, eager, size, force_tree)
+
+
+def settle_deferred(update: PyTree, axis_name, merge_fn: MergeFn,
+                    topology: Topology, compress: bool = False,
+                    force_tree: bool = False) -> PyTree:
+    """Run every DEFERRED stage of the plan on ``update``.
+
+    ``update`` must already be settled through the eager levels (a
+    ``partial_merge`` output). Does not touch memory — this is the exchange
+    half of ``commit_deferred``; per-stage scheduled commits go through
+    ``defer_cascade`` instead.
+    """
+    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
+    if plan is None:
+        return update
+    _, deferred = split_eager_deferred(
+        compile_plan(plan, size, merge_fn=merge_fn))
+    return _run_stages(update, axis_name, merge_fn, deferred, size,
+                       force_tree)
 
 
 def commit_deferred(pending: "PendingUpdate", mem: PyTree, axis_name,
@@ -521,12 +546,81 @@ def commit_deferred(pending: "PendingUpdate", mem: PyTree, axis_name,
     the expensive cross-pod traffic — remains, paid once per K steps
     instead of every step (the paper's mergeable bit, level 2).
     """
-    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
-    u = pending.update
-    if plan is not None:
-        _, deferred = split_eager_deferred(compile_plan(plan, size))
-        u = _run_stages(u, axis_name, merge_fn, deferred, size, force_tree)
+    u = settle_deferred(pending.update, axis_name, merge_fn, topology,
+                        compress=compress, force_tree=force_tree)
     return merge_fn.tree_apply(mem, u, key=key)
+
+
+def deferred_stages_of(topology: Topology, axis_size: int,
+                       merge_fn: Optional[MergeFn] = None) -> list:
+    """The compiled deferred stages of ``topology`` on an ``axis_size`` axis
+    (size-1 levels compile away, so this can be shorter than the plan's
+    ``num_deferred``)."""
+    if not isinstance(topology, MergePlan):
+        return []
+    _, deferred = split_eager_deferred(
+        compile_plan(topology, axis_size, merge_fn=merge_fn))
+    return deferred
+
+
+def defer_cascade(delta: PyTree, pendings: Sequence[PyTree], due: int,
+                  axis_name, merge_fn: MergeFn, topology: Topology,
+                  compress: bool = False, force_tree: bool = False
+                  ) -> tuple[list[PyTree], Optional[PyTree]]:
+    """One step of the scheduled multi-level merge-on-evict cascade.
+
+    ``pendings`` holds one accumulator per compiled deferred stage,
+    innermost first; ``pendings[i]`` is replicated within stage i's
+    stride-unit (it was built from settled stage i-1 blocks). ``due`` is the
+    STATIC number of leading deferred stages committing this step — a
+    nested :class:`~repro.core.defer_schedule.DeferSchedule` guarantees the
+    due set is a prefix, which is what keeps the upward cascade from ever
+    double-counting a contribution.
+
+    The step's ``delta`` settles through the eager levels (per-step cheap
+    traffic) and coalesces into ``pendings[0]``. Each due stage then
+    exchanges its pending across its units — wire paid once per its
+    interval — and folds the result into the pending above. Returns the new
+    accumulators and, when every deferred stage committed, the full-scope
+    combination (``None`` otherwise — the optimizer has nothing to consume
+    on a partial commit).
+    """
+    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
+    if plan is None:
+        raise ValueError("defer_cascade needs a MergePlan with deferred "
+                         "levels (got a degenerate/flat topology)")
+    stages = compile_plan(plan, size, merge_fn=merge_fn)
+    eager, deferred = split_eager_deferred(stages)
+    if not deferred:
+        raise ValueError("defer_cascade: plan has no deferred stages "
+                         "(no :defer levels, or they all have size 1)")
+    pendings = list(pendings)
+    if len(pendings) != len(deferred):
+        raise ValueError(
+            f"defer_cascade: {len(pendings)} pendings for "
+            f"{len(deferred)} deferred stages "
+            f"({[s.name for s in deferred]})")
+    if not 0 <= due <= len(deferred):
+        raise ValueError(f"defer_cascade: due={due} out of range "
+                         f"[0, {len(deferred)}]")
+
+    u = _run_stages(delta, axis_name, merge_fn, eager, size, force_tree)
+    x = merge_fn.tree_combine(pendings[0], u)
+    if due == 0:
+        return [x] + pendings[1:], None
+
+    new_pendings = list(pendings)
+    for i in range(due):
+        new_pendings[i] = merge_fn.tree_identity(pendings[i])
+        x = _run_stages(x, axis_name, merge_fn, [deferred[i]], size,
+                        force_tree)
+        if i + 1 < len(deferred):
+            if i + 1 < due:
+                x = merge_fn.tree_combine(pendings[i + 1], x)
+            else:
+                new_pendings[i + 1] = merge_fn.tree_combine(pendings[i + 1], x)
+    settled = x if due == len(deferred) else None
+    return new_pendings, settled
 
 
 def reduce_update(update: PyTree, axis_name, merge: MergeFn,
@@ -544,7 +638,7 @@ def reduce_update(update: PyTree, axis_name, merge: MergeFn,
                                  or topology.group_size > 1):
         return hierarchical_merge(update, axis_name, merge, topology,
                                   compress=compress, force_tree=force_tree)
-    if compress and merge.encode is not None:
+    if compress:
         return tree_merge(update, axis_name, merge, compress=True)
     if not force_tree and merge.xla_reduce in _XLA_REDUCERS:
         return jax.tree.map(

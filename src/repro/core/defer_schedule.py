@@ -1,0 +1,235 @@
+"""Schedule-aware deferred commits: pick per-level commit intervals K from
+the per-level roofline.
+
+The paper's merge-on-evict amortizes expensive merges by letting cores keep
+privatized updates and merging "periodically or at the end of computation".
+PR 2 built the mechanism (``partial_merge`` / ``soft_merge(plan=)`` /
+``commit_deferred``); this module decides the *policy*: how often each
+deferred level of a :class:`~repro.core.merge_plan.MergePlan` should commit.
+
+The rule is the roofline's: a deferred level's commit moves (to first order)
+the same bytes as its eager per-step exchange would, so committing every
+``K`` steps amortizes its wire time ``t_lvl`` to ``t_lvl / K`` per step.
+Pick the smallest ``K`` at which the amortized time no longer dominates the
+per-step bound (compute, HBM, or the eager levels' collective time):
+
+    t_lvl / K  <=  target_fraction * max(compute_s, memory_s, eager_wire_s)
+
+Inputs come from the dryrun's measured per-level wire vector
+(``hlo_cost.analyze_hlo(level_sizes=...)`` on the *eager* twin of the plan —
+the deferred level must appear in the program being measured so its bytes
+are known) and a per-level rate model: the analytic ``Fabric``
+(``benchmarks/simulator.py``), an explicit bandwidth list, or the default
+``hlo_analysis.level_bandwidths`` rates.
+
+Intervals are *nested* (each outer deferred level's K is a multiple of the
+level below), so the levels due at any step are always a prefix of the
+deferred suffix — which is what lets ``ccache.defer_cascade`` settle a
+pending upward through the hierarchy without ever double-counting a
+contribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class DeferSchedule:
+    """Commit intervals for a plan's deferred levels, innermost first.
+
+    ``level_names[i]`` commits every ``intervals[i]`` steps; intervals are
+    nested (``intervals[i+1] % intervals[i] == 0``). ``period`` — the top
+    interval — is the full-commit cycle: one optimizer-visible commit per
+    ``period`` accumulated steps.
+    """
+
+    level_names: tuple[str, ...]
+    intervals: tuple[int, ...]
+    predicted: Optional[dict] = dataclasses.field(default=None, compare=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "level_names", tuple(self.level_names))
+        object.__setattr__(self, "intervals", tuple(self.intervals))
+        if len(self.level_names) != len(self.intervals):
+            raise ValueError(
+                f"{len(self.level_names)} deferred levels but "
+                f"{len(self.intervals)} intervals")
+        if not self.intervals:
+            raise ValueError("DeferSchedule needs at least one deferred level")
+        for name, k in zip(self.level_names, self.intervals):
+            if int(k) != k or k < 1:
+                raise ValueError(f"level {name!r}: commit interval must be a "
+                                 f"positive integer, got {k!r}")
+        for (ni, ki), (no, ko) in zip(
+                zip(self.level_names, self.intervals),
+                list(zip(self.level_names, self.intervals))[1:]):
+            if ko % ki != 0:
+                raise ValueError(
+                    f"commit intervals must be nested (each outer level's K "
+                    f"a multiple of the level below): {no}:{ko} is not a "
+                    f"multiple of {ni}:{ki}")
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.intervals)
+
+    @property
+    def period(self) -> int:
+        """Steps per full (optimizer-visible) commit cycle."""
+        return self.intervals[-1]
+
+    def due_count(self, step: int) -> int:
+        """How many leading deferred levels commit after completing the
+        ``step``-th accumulation step (1-based). Nesting makes the due set
+        a prefix, so a count is a complete description."""
+        n = 0
+        for k in self.intervals:
+            if step % k == 0:
+                n += 1
+            else:
+                break
+        return n
+
+    @staticmethod
+    def fixed(k: int, level_names: Sequence[str]) -> "DeferSchedule":
+        """Every deferred level commits every ``k`` steps (the manual
+        ``--merge-defer K`` path)."""
+        names = tuple(level_names)
+        return DeferSchedule(level_names=names, intervals=(int(k),) * len(names))
+
+    def as_dict(self) -> dict:
+        out = {"level_names": list(self.level_names),
+               "intervals": list(self.intervals),
+               "period": self.period}
+        if self.predicted is not None:
+            out["predicted"] = self.predicted
+        return out
+
+    def describe(self) -> str:
+        parts = [f"{n}: K={k}" for n, k in zip(self.level_names,
+                                               self.intervals)]
+        s = ", ".join(parts) + f" (period {self.period})"
+        p = self.predicted
+        if p:
+            eager = p.get("wire_bytes_per_step_eager")
+            amort = p.get("wire_bytes_per_step_deferred")
+            if eager and amort:
+                s += (f"; predicted wire {eager / 1e6:.2f} MB/step -> "
+                      f"{amort / 1e6:.2f} MB/step")
+            top = p.get("per_level", [])
+            if top:
+                t = top[-1]
+                s += (f"; {t['name']} level {t['bytes_per_step'] / 1e6:.3f} "
+                      f"MB/step -> {t['amortized_bytes_per_step'] / 1e6:.3f} "
+                      f"MB/step ({t['interval']}x)")
+        return s
+
+
+def _resolve_bandwidths(n: int, names: Sequence[str],
+                        bandwidths: Optional[Sequence[float]],
+                        fabric) -> list[float]:
+    if bandwidths is not None:
+        if len(bandwidths) != n:
+            raise ValueError(f"{n} levels but {len(bandwidths)} bandwidths")
+        return [float(b) for b in bandwidths]
+    if fabric is not None:
+        by_name = {lv.name: float(lv.link_bw) for lv in fabric.levels}
+        out = []
+        for i, name in enumerate(names):
+            if name in by_name:
+                out.append(by_name[name])
+            elif i < len(fabric.levels):
+                out.append(float(fabric.levels[i].link_bw))
+            else:
+                raise ValueError(
+                    f"fabric has no level named {name!r} and no level at "
+                    f"index {i}")
+        return out
+    from repro.launch.hlo_analysis import level_bandwidths
+    return level_bandwidths(n, names)
+
+
+def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
+                         level_names: Optional[Sequence[str]] = None, *,
+                         bandwidths: Optional[Sequence[float]] = None,
+                         fabric=None,
+                         compute_s: float = 0.0, memory_s: float = 0.0,
+                         target_fraction: float = 0.5,
+                         k_min: int = 1, k_max: int = 64) -> DeferSchedule:
+    """Solve per-level commit intervals for ``plan``'s deferred levels.
+
+    ``wire_bytes_by_level`` is the measured per-level wire vector of the
+    plan's EAGER twin (every level exchanged each step) — per-device or
+    machine-wide, as long as ``bandwidths``/``fabric`` rates use the same
+    basis. ``compute_s``/``memory_s`` are the other two roofline terms of
+    one step. A deferred level's K is the smallest interval at which its
+    amortized wire time stays under ``target_fraction`` of the per-step
+    bound; intervals are then rounded up to nest.
+    """
+    exec_levels = [lv for lv in plan.levels if lv.size > 1]
+    names = (tuple(level_names) if level_names is not None
+             else tuple(lv.name for lv in exec_levels))
+    vec = [float(b) for b in wire_bytes_by_level]
+    if len(vec) != len(names):
+        raise ValueError(f"wire vector has {len(vec)} levels but names are "
+                         f"{names}")
+    deferred = [lv for lv in exec_levels if lv.defer]
+    if not deferred:
+        raise ValueError("plan has no deferred levels to schedule "
+                         "(no :defer flags, or they all have size 1)")
+    idx = {}
+    for lv in exec_levels:
+        if lv.name not in names:
+            raise ValueError(f"plan level {lv.name!r} missing from the "
+                             f"measured level names {names}")
+        idx[lv.name] = names.index(lv.name)
+    bws = _resolve_bandwidths(len(names), names, bandwidths, fabric)
+
+    deferred_ix = {idx[lv.name] for lv in deferred}
+    eager_wire_s = sum(b / bw for i, (b, bw) in enumerate(zip(vec, bws))
+                       if i not in deferred_ix)
+    step_bound_s = max(compute_s, memory_s, eager_wire_s)
+
+    intervals: list[int] = []
+    per_level = []
+    prev_k = 1
+    for lv in deferred:
+        b = vec[idx[lv.name]]
+        t = b / bws[idx[lv.name]]
+        if step_bound_s <= 0.0:
+            # Nothing to hide the commit behind: defer as far as allowed.
+            k = k_max
+        elif t <= 0.0:
+            k = 1  # the level has no measured traffic; deferring buys nothing
+        else:
+            k = math.ceil(t / (target_fraction * step_bound_s))
+        k = max(k, k_min, prev_k)
+        k = ((k + prev_k - 1) // prev_k) * prev_k      # nest on the level below
+        if k > k_max:
+            k = max(prev_k, (k_max // prev_k) * prev_k)
+        intervals.append(k)
+        per_level.append({"name": lv.name, "interval": k,
+                          "bytes_per_step": b,
+                          "amortized_bytes_per_step": b / k,
+                          "time_s": t, "amortized_s": t / k})
+        prev_k = k
+
+    eager_total = sum(vec)
+    amortized_total = (sum(b for i, b in enumerate(vec)
+                           if i not in deferred_ix)
+                       + sum(p["amortized_bytes_per_step"]
+                             for p in per_level))
+    predicted = {
+        "target_fraction": target_fraction,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "eager_wire_s": eager_wire_s, "step_bound_s": step_bound_s,
+        "per_level": per_level,
+        "wire_bytes_per_step_eager": eager_total,
+        "wire_bytes_per_step_deferred": amortized_total,
+        "top_amortization_x": intervals[-1],
+    }
+    return DeferSchedule(level_names=tuple(lv.name for lv in deferred),
+                         intervals=tuple(intervals), predicted=predicted)

@@ -234,7 +234,8 @@ class LevelStage:
     transport: str
 
 
-def compile_plan(plan: MergePlan, axis_size: int) -> list[LevelStage]:
+def compile_plan(plan: MergePlan, axis_size: int,
+                 merge_fn=None) -> list[LevelStage]:
     """Validate ``plan`` against the axis and emit its stage sequence.
 
     Size-1 levels are no-ops and are dropped. The innermost *emitted* stage
@@ -242,8 +243,22 @@ def compile_plan(plan: MergePlan, axis_size: int) -> list[LevelStage]:
     "auto" resolves to "xla" there and "software" above (the fused
     collective only exists for whole aligned rank groups — upper levels are
     exactly the exchanges XLA cannot express per-representative).
+
+    With ``merge_fn``, per-level ``compress`` flags are checked against the
+    merge's wire codec: a level asking for compression from a merge with no
+    ``encode``/``decode`` raises instead of silently exchanging full-width
+    bytes the caller believes are compressed.
     """
     plan.validate(axis_size)
+    if merge_fn is not None and (merge_fn.encode is None
+                                 or merge_fn.decode is None):
+        bad = [lv.name for lv in plan.levels if lv.compress and lv.size > 1]
+        if bad:
+            raise ValueError(
+                f"levels {bad} set compress but merge {merge_fn.name!r} "
+                f"defines no encode/decode wire format — the exchange would "
+                f"silently stay uncompressed; use a codec merge (e.g. "
+                f"int8_compressed_add) or drop the compress flags")
     stages: list[LevelStage] = []
     strides = plan.strides()
     for i, lv in enumerate(plan.levels):

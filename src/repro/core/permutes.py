@@ -20,18 +20,32 @@ def is_pow2(n: int) -> bool:
     return n > 0 and n & (n - 1) == 0
 
 
+def _require_divides(builder: str, what: str, block: int, size: int) -> None:
+    if block < 1 or size % block != 0:
+        raise ValueError(
+            f"{builder}: {what} {block} must divide the axis size {size}; a "
+            f"partial trailing block would send ranks outside the axis")
+
+
 def butterfly_perms(size: int, step: int) -> list[tuple[int, int]]:
     """One recursive-doubling round over the whole axis: ``i <-> i ^ step``.
 
     For aligned power-of-two blocks, steps below the block size stay inside
     the block (``i ^ step`` preserves the high bits), so this single builder
-    serves both the flat butterfly and block-confined intra rounds.
+    serves both the flat butterfly and block-confined intra rounds. The
+    pairing is only a permutation when ``2 * step`` tiles the axis — loudly
+    rejected otherwise (``i ^ step`` would leave the axis).
     """
+    if not is_pow2(step):
+        raise ValueError(f"butterfly_perms: step must be a power of two, "
+                         f"got {step}")
+    _require_divides("butterfly_perms", "pair block 2*step", 2 * step, size)
     return [(i, i ^ step) for i in range(size)]
 
 
 def ring_perm(size: int, group: int) -> list[tuple[int, int]]:
     """Each rank -> next lane in its aligned ``group``-sized ring."""
+    _require_divides("ring_perm", "group", group, size)
     return [(i, (i // group) * group + ((i % group) + 1) % group)
             for i in range(size)]
 
@@ -47,6 +61,7 @@ def rep_exchange_perms(size: int, stride: int,
     the two-level inter-group exchange; ``stride == 1`` the flat butterfly.
     """
     block = stride * fanout
+    _require_divides("rep_exchange_perms", "block stride*fanout", block, size)
     perms: list[list[tuple[int, int]]] = []
 
     def partner_of(step_or_inc: int, ring: bool) -> list[tuple[int, int]]:
@@ -79,6 +94,7 @@ def lane_exchange_perms(size: int, stride: int,
     lanes instead of serializing on lane 0. Butterfly for power-of-two
     ``fanout``, ring perm otherwise."""
     block = stride * fanout
+    _require_divides("lane_exchange_perms", "block stride*fanout", block, size)
 
     def perm_for(step_or_inc: int, ring: bool) -> list[tuple[int, int]]:
         out = []
@@ -106,6 +122,7 @@ def binomial_broadcast_perms(size: int,
     """Binomial swap-tree broadcast from lane 0 of each aligned ``group``:
     returns ``[(k, perm), ...]`` rounds; at round ``k`` lanes ``[k, 2k)``
     receive from lanes ``[0, k)`` (the caller selects with ``lane < k``)."""
+    _require_divides("binomial_broadcast_perms", "group", group, size)
     rounds = []
     k = 1
     while k < group:
@@ -127,6 +144,12 @@ def lane_gather_doubling_perms(size: int,
     """Recursive-doubling all-gather pairing within each aligned unit:
     round ``k`` pairs lane ``l`` with lane ``l ^ 2^k``. Power-of-two
     ``stride`` only (callers fall back to ``ring_perm`` otherwise)."""
+    if not is_pow2(stride):
+        raise ValueError(
+            f"lane_gather_doubling_perms: stride must be a power of two "
+            f"(recursive doubling pairs lanes by XOR), got {stride}; use "
+            f"ring_perm for other unit sizes")
+    _require_divides("lane_gather_doubling_perms", "stride", stride, size)
     perms = []
     k = 1
     while k < stride:

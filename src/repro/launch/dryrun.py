@@ -36,7 +36,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
         get_smoke_config
     from repro.launch import hlo_cost
     from repro.launch.hlo_analysis import (DCI_BW, HBM_BW, ICI_BW,
-                                           PEAK_FLOPS, roofline_terms)
+                                           PEAK_FLOPS, dci_bytes,
+                                           roofline_terms)
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import plan_for
 
@@ -125,12 +126,32 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
             rec["hlo_walk"]["wire_bytes_inter"] = walk["wire_bytes_inter"]
         rec["per_collective"] = walk["per_collective"]
 
+        # The legacy 2-level intra/inter keys only exist on multipod walks;
+        # record the DCI share derived from the per-level vector instead of
+        # a key that defaults to zero. The roofline itself charges the
+        # per-level vector directly, so no legacy split is passed to it.
+        rec["hlo_walk"]["wire_bytes_inter_derived"] = dci_bytes(
+            walk["wire_bytes_by_level"], walk["level_names"])
         terms = roofline_terms(walk["flops"], walk["hbm_bytes"],
                                walk["wire_bytes"],
-                               walk.get("wire_bytes_inter", 0.0),
                                wire_bytes_by_level=walk["wire_bytes_by_level"],
                                level_names=walk["level_names"])
         rec["roofline"] = terms
+
+        # Schedule-aware defer what-if: were the scarce top level deferred
+        # (merge-on-evict at pod scope), the per-level roofline picks its
+        # commit interval K — report the schedule and predicted savings.
+        if multi_pod and walk["wire_bytes_by_level"][-1] > 0:
+            from repro.core.defer_schedule import solve_defer_schedule
+            from repro.core.merge_plan import MergeLevel, MergePlan
+            what_if = MergePlan(levels=tuple(
+                MergeLevel(nm, sz, defer=(i == len(level_sizes) - 1))
+                for i, (nm, sz) in enumerate(zip(level_names, level_sizes))))
+            sched = solve_defer_schedule(
+                what_if, walk["wire_bytes_by_level"], level_names,
+                compute_s=terms["compute_s"], memory_s=terms["memory_s"])
+            rec["defer_schedule"] = sched.as_dict()
+            print("defer schedule (top level deferred):", sched.describe())
 
         # MODEL_FLOPS: useful-work basis. 6ND train, 2ND forward-only
         # (N_active for MoE), D = tokens processed by the step.

@@ -55,6 +55,17 @@ def level_bandwidths(n_levels: int,
     return out
 
 
+def dci_bytes(wire_bytes_by_level: Sequence[float],
+              names: Optional[Sequence[str]] = None) -> float:
+    """The DCI-class share of a per-level byte vector: levels whose resolved
+    rate is at or below the inter-pod DCI budget. This is the two-level
+    "inter" figure derived from the level vector itself — callers should use
+    it instead of defaulting a missing legacy ``wire_bytes_inter`` key to
+    zero (which silently charges the scarcest link class nothing)."""
+    bws = level_bandwidths(len(wire_bytes_by_level), names)
+    return sum(b for b, bw in zip(wire_bytes_by_level, bws) if bw <= DCI_BW)
+
+
 def collective_time_by_level(wire_bytes_by_level: Sequence[float],
                              bws: Optional[Sequence[float]] = None,
                              names: Optional[Sequence[str]] = None) -> dict:

@@ -14,7 +14,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import ccache
 from repro.core.ccache import Topology
+from repro.core.defer_schedule import DeferSchedule
 from repro.core.grad_merge import merge_gradients, microbatched_value_and_grad
 from repro.core.merge_functions import ADD, int8_compressed_add
 from repro.models.module import split_params
@@ -113,7 +115,8 @@ def merge_axes_for(mesh: Mesh, topology: Optional[Topology]):
 def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
                     mesh: Optional[Mesh] = None,
                     merge_topology: Optional[Topology] = None,
-                    merge_compress: bool = False):
+                    merge_compress: bool = False,
+                    defer_schedule: Optional[DeferSchedule] = None):
     """Build the train step.
 
     Default: implicit gradient reduction — XLA inserts the collectives the
@@ -122,12 +125,22 @@ def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
     gradient merge is *explicit*: per-shard grads are computed under
     ``shard_map`` manual over the merge axes and reconciled by the CCache
     hierarchical engine (fused innermost collective, representative-only or
-    lane-parallel upper-level exchange, optionally compressed). Plans with
-    ``defer`` levels are rejected: the optimizer consumes the merged
-    gradient every step, so deferring a level would silently train on
-    partially-merged gradients — merge-on-evict belongs to the ccache
-    ``soft_merge``/``commit_deferred`` API, not this path. All remaining
-    mesh axes (tensor/model parallelism)
+    lane-parallel upper-level exchange, optionally compressed).
+
+    Plans with ``defer`` levels additionally need a ``defer_schedule``
+    (``repro.core.defer_schedule``): the step then runs the merge-on-evict
+    cascade — each step's gradient settles through the eager levels into a
+    per-deferred-level ``PendingUpdate``, each deferred level's exchange is
+    paid once per its commit interval, and the optimizer steps once per
+    full-commit cycle on the cycle's mean gradient (``defer_cascade``; K
+    deferred commits are numerically K-step gradient accumulation over the
+    eagerly-merged gradients — property-tested in
+    ``tests/test_defer_schedule.py``). The return value is then a
+    :class:`DeferredTrainStep` (one variant per due-count) rather than a
+    plain function. Without a schedule, ``defer`` plans are rejected: the
+    optimizer would silently train on partially merged gradients.
+
+    All remaining mesh axes (tensor/model parallelism)
     stay on the compiler via shard_map's ``auto`` set, which is what lets
     the same step serve the implicit ``plan_train`` path — params keep
     their model-axis sharding and must be replicated over the merge axes
@@ -143,14 +156,24 @@ def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
                 loss_fn, num_microbatches)(params, batch)
         return jax.value_and_grad(loss_fn)(params, batch)
 
+    if merge_topology is None and defer_schedule is not None:
+        raise ValueError("defer_schedule needs a merge_topology with :defer "
+                         "levels")
     if merge_topology is not None:
         assert mesh is not None, "explicit merge needs the mesh"
-        if getattr(merge_topology, "has_deferred", False):
+        has_deferred = getattr(merge_topology, "has_deferred", False)
+        if has_deferred and defer_schedule is None:
             raise ValueError(
-                "merge plans with defer levels are not valid for the "
-                "gradient merge: the optimizer needs the fully merged "
-                "gradient every step. Use soft_merge/commit_deferred for "
-                "merge-on-evict workloads, or drop the :defer flags.")
+                "merge plan has :defer levels but no commit schedule: the "
+                "optimizer consumes the merged gradient, so deferred levels "
+                "need a DeferSchedule (train.py: --merge-defer auto|K; "
+                "library: repro.core.defer_schedule.solve_defer_schedule or "
+                "DeferSchedule.fixed). Deferred-K training accumulates K "
+                "steps' gradients and steps the optimizer once per commit; "
+                "alternatively drop the :defer flags.")
+        if defer_schedule is not None and not has_deferred:
+            raise ValueError("defer_schedule given but the merge plan has "
+                             "no :defer levels")
         from jax.experimental.shard_map import shard_map
 
         axis = merge_axes_for(mesh, merge_topology)
@@ -171,6 +194,11 @@ def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
                 f"merge plan, or the implicit XLA reduction for "
                 f"tensor-parallel cells.")
         grad_merge_fn = int8_compressed_add() if merge_compress else ADD
+
+        if defer_schedule is not None:
+            return _make_deferred_train_step(
+                grads_of, optimizer, mesh, merge_topology, merge_compress,
+                defer_schedule, axis, axes_set, auto, grad_merge_fn)
 
         def sharded_grads(params, batch):
             def shard_fn(params, batch):
@@ -203,15 +231,162 @@ def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
     return train_step
 
 
-class LoweredPlan:
-    """Everything needed to lower one (arch x shape x mesh) cell."""
+class DeferredTrainStep:
+    """Scheduled deferred-commit train step: one step callable per due-count.
 
-    def __init__(self, fn, in_specs, in_shardings, out_shardings, rules):
+    ``variants[due]`` is a plain ``step(state, batch)`` for a step on which
+    ``due`` leading deferred stages commit — index 0 only accumulates, the
+    last settles every deferred level and steps the optimizer on the
+    cycle's mean gradient. ``state`` carries ``{"params", "opt", "defer":
+    {"t", "pending"}}``; seed the extra entry with ``init_defer_state``.
+
+    The due-count is a *host-side* decision (it selects which compiled
+    program runs, so the skipped commits' collectives never execute —
+    that is the wire saving). Calling the object dispatches eagerly off the
+    step counter; ``jit()`` returns a dispatcher over per-variant jitted
+    functions for the train loop. With nested intervals there are at most
+    ``num_deferred + 1`` variants, so the compile count is bounded.
+    """
+
+    def __init__(self, variants, schedule: DeferSchedule, init_fn, dp: int,
+                 deferred_names: tuple):
+        self.variants = variants
+        self.schedule = schedule
+        self._init_fn = init_fn
+        self.dp = dp
+        self.deferred_names = deferred_names
+
+    def init_defer_state(self, params) -> dict:
+        """Zeroed pendings (merge identity) + step counter, as a state
+        entry: ``state["defer"] = step.init_defer_state(params)``."""
+        return self._init_fn(params)
+
+    def due(self, state) -> int:
+        return self.schedule.due_count(int(state["defer"]["t"]) + 1)
+
+    def __call__(self, state, batch):
+        return self.variants[self.due(state)](state, batch)
+
+    def jit(self, **jit_kwargs):
+        jitted = [jax.jit(v, **jit_kwargs) for v in self.variants]
+
+        def call(state, batch):
+            return jitted[self.due(state)](state, batch)
+
+        return call
+
+
+def _make_deferred_train_step(grads_of, optimizer, mesh: Mesh, plan,
+                              merge_compress: bool,
+                              schedule: DeferSchedule, axis, axes_set, auto,
+                              grad_merge_fn) -> DeferredTrainStep:
+    """The merge-on-evict train step family over ``defer_cascade``.
+
+    Gradients are contributions to an ADD merge, so the pending cascade IS
+    gradient accumulation: each rank's pending rides a ``(dp, ...)``-leading
+    global array sharded over the merge axes, eager levels settle per step,
+    and each deferred level's exchange runs only in the variants where it is
+    due. The optimizer consumes ``settled / (dp * period)`` — the mean over
+    ranks and over the cycle's steps — which makes K deferred commits
+    numerically identical to accumulating K eagerly-merged mean gradients.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    dp = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        dp *= mesh.shape.get(a, 1)
+    deferred = ccache.deferred_stages_of(plan, dp, merge_fn=grad_merge_fn)
+    if not deferred:
+        raise ValueError("the merge plan's :defer levels all compile away "
+                         f"(size 1) on a {dp}-rank merge axis; drop the "
+                         ":defer flags")
+    names = tuple(s.name for s in deferred)
+    if schedule.num_levels != len(deferred) or schedule.level_names != names:
+        raise ValueError(
+            f"DeferSchedule levels {schedule.level_names} with intervals "
+            f"{schedule.intervals} do not match the plan's compiled "
+            f"deferred stages {names}")
+    n_def = len(deferred)
+    period = schedule.period
+    # Mean semantics only exist for additive merges (mirrors
+    # merge_gradients' mean handling).
+    scale = (1.0 / (dp * period)
+             if grad_merge_fn.name in ("add", "int8_add") else 1.0)
+
+    def make_variant(due: int):
+        def region(params, batch, *pendings):
+            with partition.manual_axes(axes_set):
+                loss, grads = grads_of(params, batch)
+            local = [jax.tree.map(lambda x: x[0], p) for p in pendings]
+            new_pendings, settled = ccache.defer_cascade(
+                grads, local, due, axis, grad_merge_fn, plan,
+                compress=merge_compress)
+            out = tuple(jax.tree.map(lambda x: x[None], p)
+                        for p in new_pendings)
+            loss = lax.pmean(loss, axis)
+            if due == n_def:
+                return loss, out, settled
+            return loss, out
+
+        in_specs = (P(), P(axis)) + (P(axis),) * n_def
+        out_specs = ((P(), P(axis), P()) if due == n_def
+                     else (P(), P(axis)))
+        sharded = shard_map(region, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False, auto=auto)
+
+        def step(state, batch):
+            params = state["params"]
+            d = state["defer"]
+            if due == n_def:
+                loss, pendings, settled = sharded(params, batch,
+                                                  *d["pending"])
+                grads = jax.tree.map(
+                    lambda g: g * jnp.asarray(scale, g.dtype), settled)
+                params, opt_state, stats = optimizer.step(
+                    params, grads, state["opt"])
+                metrics = {"loss": loss, **stats}
+            else:
+                loss, pendings = sharded(params, batch, *d["pending"])
+                opt_state = state["opt"]
+                metrics = {"loss": loss,
+                           "grad_norm": jnp.zeros((), jnp.float32),
+                           "lr": jnp.zeros((), jnp.float32)}
+            new_state = {"params": params, "opt": opt_state,
+                         "defer": {"t": d["t"] + 1, "pending": pendings}}
+            return new_state, metrics
+
+        return step
+
+    def init_defer_state(params):
+        pending = tuple(
+            jax.tree.map(
+                lambda p: grad_merge_fn.identity((dp,) + p.shape, p.dtype),
+                params)
+            for _ in range(n_def))
+        return {"t": jnp.zeros((), jnp.int32), "pending": pending}
+
+    variants = [make_variant(due) for due in range(n_def + 1)]
+    return DeferredTrainStep(variants, schedule, init_defer_state, dp, names)
+
+
+class LoweredPlan:
+    """Everything needed to lower one (arch x shape x mesh) cell.
+
+    For deferred-commit train plans, ``fn`` is the full-commit variant (the
+    superset program: every level's exchange — what a per-step cost walk
+    should see at worst); ``defer_step`` carries the whole
+    :class:`DeferredTrainStep` (all variants + schedule) for executing
+    callers.
+    """
+
+    def __init__(self, fn, in_specs, in_shardings, out_shardings, rules,
+                 defer_step: Optional[DeferredTrainStep] = None):
         self.fn = fn
         self.in_specs = in_specs
         self.in_shardings = in_shardings
         self.out_shardings = out_shardings
         self.rules = rules
+        self.defer_step = defer_step
 
     def lower(self, mesh: Mesh):
         jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
@@ -224,14 +399,19 @@ def plan_train(cfg, shape_cfg, mesh: Mesh,
                num_microbatches: Optional[int] = None,
                extra_rules: Optional[dict] = None,
                merge_plan: Optional[Topology] = None,
-               merge_compress: bool = False) -> LoweredPlan:
+               merge_compress: bool = False,
+               defer_schedule: Optional[DeferSchedule] = None) -> LoweredPlan:
     """Build the implicit production train plan.
 
     With ``merge_plan`` the data-parallel gradient reduction inside the
     otherwise-implicit step is routed through the CCache hierarchical
     engine (shard_map manual over the dp axes) instead of the XLA-inserted
     all-reduce — the N-level MergePlan threaded into the production path,
-    not just the explicit shard_map step. Restriction on the pinned jax
+    not just the explicit shard_map step. A plan with ``:defer`` levels
+    additionally takes a ``defer_schedule``; the state then carries the
+    pending cascade (``state["defer"]``, leading-dim sharded over the merge
+    axes) and the returned plan's ``defer_step`` holds every commit
+    variant. Restriction on the pinned jax
     0.4.37: every non-merge mesh axis must have size 1 (pure data-parallel
     meshes) — ``make_train_step`` raises on tensor-parallel cells, which
     keep the implicit XLA reduction until the jax upgrade.
@@ -263,12 +443,27 @@ def plan_train(cfg, shape_cfg, mesh: Mesh,
 
     step = make_train_step(model, cfg, optimizer, nmb, mesh=mesh,
                            merge_topology=merge_plan,
-                           merge_compress=merge_compress)
+                           merge_compress=merge_compress,
+                           defer_schedule=defer_schedule)
+    defer_step = None
+    fn = step
+    if isinstance(step, DeferredTrainStep):
+        defer_step = step
+        fn = step.variants[-1]
+        defer_specs = jax.eval_shape(step.init_defer_state, param_specs)
+        state_specs["defer"] = defer_specs
+        axis = merge_axes_for(mesh, merge_plan)
+        state_sh["defer"] = {
+            "t": NamedSharding(mesh, P()),
+            "pending": jax.tree.map(
+                lambda _: NamedSharding(mesh, P(axis)),
+                defer_specs["pending"])}
     metrics_sh = NamedSharding(mesh, P())
     out_sh = (state_sh, {"loss": metrics_sh, "grad_norm": metrics_sh,
                          "lr": metrics_sh})
-    return LoweredPlan(step, (state_specs, batch_specs),
-                       (state_sh, batch_sh), out_sh, rules)
+    return LoweredPlan(fn, (state_specs, batch_specs),
+                       (state_sh, batch_sh), out_sh, rules,
+                       defer_step=defer_step)
 
 
 # ---------------------------------------------------------------------------

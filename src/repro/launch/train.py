@@ -14,6 +14,37 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import sys
+
+
+def _force_host_devices_for_topology() -> None:
+    """A --merge-topology over N ranks needs N devices; on a CPU host (the
+    smoke/dev path) force the host platform to that count BEFORE jax
+    initializes, unless the caller already pinned XLA_FLAGS. Real
+    accelerator backends ignore the host-platform device count."""
+    if "XLA_FLAGS" in os.environ:
+        return
+    spec = None
+    for i, a in enumerate(sys.argv):
+        if a == "--merge-topology" and i + 1 < len(sys.argv):
+            spec = sys.argv[i + 1]
+        elif a.startswith("--merge-topology="):
+            spec = a.split("=", 1)[1]
+    if not spec:
+        return
+    # merge_plan is jax-free, so the real grammar owner can run pre-init.
+    from repro.core.merge_plan import MergePlan
+    try:
+        n = MergePlan.parse(spec).num_ranks
+    except ValueError:
+        return  # malformed spec: let the in-line parse raise the clear error
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n}")
+
+
+_force_host_devices_for_topology()
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +59,57 @@ from repro.models.module import split_params
 from repro.models.registry import build_model
 from repro.optim import make_optimizer, warmup_cosine
 from repro.sharding.partition import sharding_rules
+
+
+def solve_defer_for_cli(merge_defer: str, cfg, shape_cfg, mesh, topology,
+                        dp: int, merge_compress: bool):
+    """Resolve --merge-defer into a DeferSchedule.
+
+    ``auto`` compiles the plan's *eager twin* (defer flags stripped — so the
+    deferred levels' per-step bytes are measurable), walks its HLO for the
+    per-level wire vector, and solves the commit intervals against the
+    step's roofline. An integer fixes every deferred level's K.
+    """
+    from repro.core.defer_schedule import DeferSchedule, solve_defer_schedule
+    from repro.core.ccache import deferred_stages_of
+
+    deferred_names = tuple(
+        s.name for s in deferred_stages_of(topology, dp))
+    if not deferred_names:
+        raise SystemExit("--merge-defer: the :defer levels all have size 1 "
+                         "and compile away; drop the flags")
+    if merge_defer != "auto":
+        try:
+            k = int(merge_defer)
+        except ValueError:
+            raise SystemExit(f"--merge-defer must be 'auto' or an integer, "
+                             f"got {merge_defer!r}")
+        if k < 1:
+            raise SystemExit("--merge-defer: K must be >= 1")
+        return DeferSchedule.fixed(k, deferred_names)
+
+    from repro.launch import hlo_cost
+    from repro.launch.hlo_analysis import roofline_terms
+    from repro.launch.steps import plan_train
+
+    eager = dataclasses.replace(topology, levels=tuple(
+        dataclasses.replace(lv, defer=False) for lv in topology.levels))
+    print("merge-defer auto: compiling the eager twin for the per-level "
+          "roofline...")
+    lp = plan_train(cfg, shape_cfg, mesh, merge_plan=eager,
+                    merge_compress=merge_compress)
+    hlo = lp.lower(mesh).compile().as_text()
+    sizes = tuple(lv.size for lv in topology.levels if lv.size > 1)
+    names = tuple(lv.name for lv in topology.levels if lv.size > 1)
+    walk = hlo_cost.analyze_hlo(hlo, level_sizes=sizes, level_names=names)
+    terms = roofline_terms(walk["flops"], walk["hbm_bytes"],
+                           walk["wire_bytes"],
+                           wire_bytes_by_level=walk["wire_bytes_by_level"],
+                           level_names=names)
+    schedule = solve_defer_schedule(
+        topology, walk["wire_bytes_by_level"], names,
+        compute_s=terms["compute_s"], memory_s=terms["memory_s"])
+    return schedule
 
 
 def main() -> None:
@@ -49,8 +131,16 @@ def main() -> None:
                         "innermost level first: 'chip:4,host:16,pod:2' "
                         "(level flags: :compress :software; the product of "
                         "sizes must equal the data-parallel device count; "
-                        ":defer is rejected here — gradients must merge "
-                        "fully every step)")
+                        ":defer levels additionally need --merge-defer)")
+    p.add_argument("--merge-defer", default="",
+                   help="commit schedule for the topology's :defer levels: "
+                        "'auto' solves per-level intervals K from the "
+                        "compiled step's per-level roofline (commit a level "
+                        "when its amortized wire time stops dominating); an "
+                        "integer fixes K for every deferred level. The "
+                        "optimizer steps once per full commit on the "
+                        "cycle's mean gradient (K-step gradient "
+                        "accumulation)")
     p.add_argument("--merge-lane-parallel", action="store_true",
                    help="shard the representative role over each unit's "
                         "lanes so upper-level exchanges bandwidth-"
@@ -116,19 +206,46 @@ def main() -> None:
         except ValueError as e:
             raise SystemExit(f"--merge-topology: {e} "
                              f"(data-parallel axes {axes})")
-        if topology.has_deferred:
+        if args.batch % dp != 0:
             raise SystemExit(
-                "--merge-topology: :defer levels are not valid for the "
-                "gradient merge (the optimizer needs the fully merged "
-                "gradient every step); drop the :defer flags")
+                f"--batch {args.batch} must be divisible by the merge "
+                f"topology's {dp} ranks (each rank takes an equal batch "
+                f"shard)")
+
+    defer_schedule = None
+    has_deferred = topology is not None and getattr(topology, "has_deferred",
+                                                    False)
+    if args.merge_defer and not has_deferred:
+        raise SystemExit("--merge-defer requires a --merge-topology with "
+                         ":defer levels")
+    if has_deferred:
+        if not args.merge_defer:
+            raise SystemExit(
+                "--merge-topology has :defer levels; pass --merge-defer "
+                "auto|K to schedule the commits (the optimizer steps once "
+                "per commit on the K-step mean gradient), or drop the "
+                ":defer flags for an eager merge every step")
+        defer_schedule = solve_defer_for_cli(
+            args.merge_defer, cfg, shape_cfg, mesh, topology, dp,
+            args.merge_compress)
+        print("merge-defer schedule:", defer_schedule.describe())
+        if (args.steps % defer_schedule.period) != 0:
+            print(f"warning: --steps {args.steps} is not a multiple of the "
+                  f"commit period {defer_schedule.period}; the trailing "
+                  f"partial cycle accumulates but never steps the optimizer")
     step_fn = make_train_step(model, cfg, optimizer, args.microbatches,
                               mesh=mesh, merge_topology=topology,
-                              merge_compress=args.merge_compress)
+                              merge_compress=args.merge_compress,
+                              defer_schedule=defer_schedule)
 
     with mesh, sharding_rules(mesh, rules):
         params, _ = split_params(model.init(jax.random.key(args.seed)))
         state = {"params": params, "opt": optimizer.init(params)}
-        jitted = jax.jit(step_fn)
+        if defer_schedule is not None:
+            state["defer"] = step_fn.init_defer_state(params)
+            jitted = step_fn.jit()
+        else:
+            jitted = jax.jit(step_fn)
 
         # Resume from the last committed checkpoint if present.
         start = 0

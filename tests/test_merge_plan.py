@@ -209,6 +209,34 @@ def test_per_level_compress_flag():
                                atol=scale * 0.2 + 1e-3)
 
 
+def test_compress_without_codec_is_a_loud_error():
+    """compress=True with a merge that defines no encode/decode used to
+    silently exchange full-width bytes; every path must raise instead."""
+    upds = jnp.ones((8, 8))
+    # flat tree_merge / reduce_update
+    with pytest.raises(ValueError, match="encode/decode"):
+        run_cores(lambda u: ccache.tree_merge(u, "cores", mf.ADD,
+                                              compress=True), upds)
+    with pytest.raises(ValueError, match="encode/decode"):
+        run_cores(lambda u: ccache.reduce_update(u, "cores", mf.ADD,
+                                                 compress=True), upds)
+    # hierarchical: function-level compress lands on the outermost level
+    plan = MergePlan.parse("chip:2,host:2,pod:2")
+    with pytest.raises(ValueError, match="encode/decode"):
+        run_cores(lambda u: _hier(u, plan, mf.ADD, compress=True), upds)
+    # per-level compress flags validated in compile_plan
+    flagged = MergePlan.parse("chip:2,host:2,pod:2:compress")
+    with pytest.raises(ValueError, match="encode/decode"):
+        compile_plan(flagged, 8, merge_fn=mf.MAX)
+    with pytest.raises(ValueError, match="encode/decode"):
+        run_cores(lambda u: _hier(u, flagged, mf.ADD), upds)
+    # a size-1 compress level has no wire: not an error
+    compile_plan(MergePlan.parse("chip:8,host:1:compress"), 8,
+                 merge_fn=mf.ADD)
+    # with a codec everything still flows
+    compile_plan(flagged, 8, merge_fn=mf.int8_compressed_add())
+
+
 def test_payload_smaller_than_lane_count():
     """Lane chunking pads: a 2-element payload over 4-lane units."""
     plan = MergePlan.parse("chip:4,pod:2", lane_parallel=True)
@@ -550,10 +578,14 @@ def test_train_cli_merge_topology():
 
 
 def test_train_cli_merge_topology_mismatch_errors():
+    # Pin the device count (the CLI otherwise forces the host platform to
+    # the plan's rank count): 8 devices vs a 6-rank plan must be a clear
+    # validation error, the real-hardware mismatch scenario.
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.train", "--arch", "xlstm-125m",
          "--smoke", "--steps", "1", "--merge-topology", "chip:3,pod:2",
          "--ckpt-dir", "/tmp/repro_mt_cli_err"],
-        env=ENV, capture_output=True, text=True, timeout=300)
+        env=dict(ENV, XLA_FLAGS="--xla_force_host_platform_device_count=8"),
+        capture_output=True, text=True, timeout=300)
     assert r.returncode != 0
     assert "product of level sizes" in (r.stderr + r.stdout)
