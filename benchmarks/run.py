@@ -109,19 +109,33 @@ def main() -> None:
             summary["hier3_defer_auto_k"] = auto["commit_every"]
             summary["hier3_defer_auto_measured_x"] = \
                 auto.get("top_level_amortization_x")
+        ovl = next((r for r in rows
+                    if r.get("case") == "hier3_overlap"), None)
+        if ovl and ovl.get("hidden_frac") is not None:
+            summary["hier3_overlap_hidden_frac"] = ovl["hidden_frac"]
+            summary["hier3_overlap_k_serialized"] = ovl.get("k_serialized")
+            summary["hier3_overlap_k"] = ovl.get("k_overlap")
 
     if want("fabric"):
         from benchmarks.simulator import default_fabric
         fabric = default_fabric(scale=4 if args.quick else 1)
         payload = (1 << 22) if args.quick else (1 << 24)  # bytes/rank
+        # Overlap hide budget: a step whose compute covers the full
+        # serialized top-level commit time (the regime the launch/land
+        # pipeline targets).
+        defer8 = fabric.hierarchical_merge(
+            payload, lane_parallel=True, defer_levels=1, commit_every=8)
+        top_commit_s = defer8["time_by_level_s"][-1] * 8
         variants = {
             "flat_butterfly": fabric.flat_merge(payload),
             "hier_rep": fabric.hierarchical_merge(payload,
                                                   lane_parallel=False),
             "hier_lane": fabric.hierarchical_merge(payload,
                                                    lane_parallel=True),
-            "hier_lane_defer8": fabric.hierarchical_merge(
-                payload, lane_parallel=True, defer_levels=1, commit_every=8),
+            "hier_lane_defer8": defer8,
+            "hier_lane_defer8_overlap": fabric.hierarchical_merge(
+                payload, lane_parallel=True, defer_levels=1, commit_every=8,
+                overlap=True, overlap_compute_s=top_commit_s),
         }
         for name, r in variants.items():
             _emit([{"bench": "fabric", "case": name,
@@ -131,6 +145,7 @@ def main() -> None:
         lane = variants["hier_lane"]
         rep = variants["hier_rep"]
         defer = variants["hier_lane_defer8"]
+        ovl = variants["hier_lane_defer8_overlap"]
         summary["fabric_top_level_reduction_x"] = round(
             flat["bytes_by_level"][-1] / lane["bytes_by_level"][-1], 1)
         summary["fabric_lane_vs_rep_speedup_x"] = round(
@@ -139,6 +154,10 @@ def main() -> None:
             lane["bytes_by_level"][-1] / defer["bytes_by_level"][-1], 1)
         summary["fabric_hier_vs_flat_speedup_x"] = round(
             flat["time_s"] / lane["time_s"], 2)
+        top_serial = defer["time_by_level_s"][-1]
+        summary["fabric_overlap_top_hidden_frac"] = round(
+            1.0 - (ovl["time_by_level_s"][-1] / top_serial), 3) \
+            if top_serial else None
 
     if want("lm"):
         from benchmarks.lm_tier import (bench_cscatter, bench_grad_accum,

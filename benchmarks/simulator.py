@@ -436,7 +436,9 @@ class Fabric:
     def hierarchical_merge(self, payload_bytes: float,
                            lane_parallel: bool = True,
                            defer_levels: int = 0,
-                           commit_every: int = 1) -> dict:
+                           commit_every: int = 1,
+                           overlap: bool = False,
+                           overlap_compute_s: float = 0.0) -> dict:
         """The MergePlan engine on this fabric.
 
         Level 0 is a block-confined all-rank exchange. Upper level i moves
@@ -447,6 +449,14 @@ class Fabric:
         more ranks driving the expensive links. The top ``defer_levels``
         levels commit once every ``commit_every`` steps; their bytes and
         time are amortized per step (the paper's mergeable bit).
+
+        With ``overlap``, the top level's commit is launch/landed: its
+        exchange runs concurrently with the next step's compute, so up to
+        ``overlap_compute_s`` of each commit's time hides for free and
+        only the exposed remainder is charged (per-step amortized). Bytes
+        still move — only the *time* is hidden — so ``bytes_by_level``
+        matches the serialized deferred merge; the result additionally
+        reports ``time_hidden_s`` (per step).
         """
         P = self.num_ranks
         strides = self.strides()
@@ -471,11 +481,30 @@ class Fabric:
                 active[i] = P // B
                 # Unit broadcast of the representative's result (sub-level).
                 bytes_by_level[i - 1] += (B - 1) / B * P * payload_bytes
-        if defer_levels:
-            k = max(1, commit_every)
-            for i in range(n - defer_levels, n):
-                bytes_by_level[i] /= k
-        return self._result(bytes_by_level, active, rounds_by_level)
+        if not defer_levels:
+            return self._result(bytes_by_level, active, rounds_by_level)
+
+        k = max(1, commit_every)
+        res = self._result(bytes_by_level, active, rounds_by_level)
+        times = list(res["time_by_level_s"])
+        hidden_per_step = 0.0
+        for i in range(n - defer_levels, n):
+            t_commit = times[i]
+            hidden = 0.0
+            if overlap and i == n - 1:
+                hidden = min(t_commit, max(0.0, overlap_compute_s))
+            times[i] = (t_commit - hidden) / k
+            hidden_per_step += hidden / k
+            bytes_by_level[i] /= k
+        out = {
+            "bytes_by_level": list(bytes_by_level),
+            "time_by_level_s": times,
+            "time_s": sum(times),
+            "level_names": res["level_names"],
+        }
+        if overlap:
+            out["time_hidden_s"] = hidden_per_step
+        return out
 
 
 def default_fabric(scale: int = 1) -> Fabric:

@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""CI perf gate: benchmark records vs the checked-in baseline.
+
+Reads the tagged ``@repro-bench`` record stream on stdin (passed through
+unchanged, so it chains after ``check_level_costs.py``), loads
+``benchmarks/baseline.json``, and FAILS when a gated metric regresses past
+its bound — perf regressions break CI instead of only printing.
+
+Baseline format::
+
+    {
+      "summary": {"<summary key>": {"min": v} | {"max": v}},
+      "cases": [{"bench": ..., "case": ..., "metric": ..., "min"/"max": v}]
+    }
+
+``min`` bounds guard benefits (speedups, reduction factors, hidden
+fractions — regressing means falling below); ``max`` bounds guard costs
+(simulated times, wire bytes — regressing means growing past). ``metric``
+may use ``name.index`` to index into a list (e.g.
+``wire_bytes_by_level_total.-1`` for the top level).
+
+Regenerate after an intentional perf change::
+
+    PYTHONPATH=src:. python -m benchmarks.run --quick --only fig6,hier,fabric \
+        | python scripts/check_baseline.py --write benchmarks/baseline.json
+
+The generator derives bounds from the current run with a 10% margin in the
+non-regressing direction.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.records import parse_record  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks", "baseline.json")
+MARGIN = 0.10
+
+# Summary keys gated at generation time: True = benefit (min bound),
+# False = cost (max bound).
+SUMMARY_KEYS = {
+    "fig6_ccache_speedup_max": True,
+    "fig6_ccache_speedup_min": True,
+    "hier_inter_wire_reduction_x": True,
+    "hier_sim_speedup_x": True,
+    "hier3_top_level_reduction_x": True,
+    "hier3_defer_amortization_x": True,
+    "hier3_defer_auto_measured_x": True,
+    "hier3_overlap_hidden_frac": True,
+    "fabric_top_level_reduction_x": True,
+    "fabric_lane_vs_rep_speedup_x": True,
+    "fabric_defer_top_amortization_x": True,
+    "fabric_hier_vs_flat_speedup_x": True,
+    "fabric_overlap_top_hidden_frac": True,
+}
+
+# (bench, case, metric, benefit?) gated per-record at generation time.
+CASE_METRICS = [
+    ("hierarchy", "flat_butterfly", "sim_time_us", False),
+    ("hierarchy", "hierarchical", "sim_time_us", False),
+    ("hierarchy", "hier3_rep", "sim_time_us", False),
+    ("hierarchy", "hier3_lane", "sim_time_us", False),
+    ("hierarchy", "hier3_lane", "wire_bytes_by_level_total.-1", False),
+    ("hierarchy", "hier3_defer_amortized", "sim_time_us", False),
+    ("hierarchy", "hier3_overlap", "hidden_frac", True),
+    ("hierarchy", "hier3_overlap", "exposed_time_us", False),
+    ("fabric", "flat_butterfly", "time_s", False),
+    ("fabric", "hier_lane", "time_s", False),
+    ("fabric", "hier_lane_defer8_overlap", "time_s", False),
+]
+
+
+def fail(msg: str) -> None:
+    print(f"check_baseline: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def lookup(rec: dict, metric: str):
+    cur = rec
+    for part in metric.split("."):
+        try:
+            cur = cur[int(part)] if isinstance(cur, list) else cur.get(part)
+        except (IndexError, ValueError, AttributeError):
+            return None
+        if cur is None:
+            return None
+    return cur
+
+
+def collect(stream) -> tuple[dict, list[dict]]:
+    summary = {}
+    rows = []
+    for line in stream:
+        print(line, end="")  # pass the stream through for the log
+        rec = parse_record(line)
+        if rec is None:
+            continue
+        if "summary" in rec:
+            summary = rec["summary"]
+        else:
+            rows.append(rec)
+    return summary, rows
+
+
+def find(rows, bench, case):
+    for r in rows:
+        if r.get("bench") == bench and r.get("case") == case:
+            return r
+    return None
+
+
+def write_baseline(path: str, summary: dict, rows: list[dict]) -> None:
+    out = {"summary": {}, "cases": []}
+    for key, benefit in SUMMARY_KEYS.items():
+        v = summary.get(key)
+        if not isinstance(v, (int, float)):
+            continue
+        bound = {"min": round(v * (1 - MARGIN), 6)} if benefit \
+            else {"max": round(v * (1 + MARGIN), 6)}
+        out["summary"][key] = bound
+    for bench, case, metric, benefit in CASE_METRICS:
+        rec = find(rows, bench, case)
+        v = lookup(rec, metric) if rec else None
+        if not isinstance(v, (int, float)):
+            continue
+        entry = {"bench": bench, "case": case, "metric": metric}
+        entry.update({"min": round(v * (1 - MARGIN), 6)} if benefit
+                     else {"max": round(v * (1 + MARGIN), 6)})
+        out["cases"].append(entry)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"check_baseline: wrote {path} ({len(out['summary'])} summary "
+          f"bounds, {len(out['cases'])} case bounds)", file=sys.stderr)
+
+
+def check(path: str, summary: dict, rows: list[dict]) -> None:
+    with open(path) as f:
+        base = json.load(f)
+    problems = []
+    for key, bound in base.get("summary", {}).items():
+        v = summary.get(key)
+        if not isinstance(v, (int, float)):
+            problems.append(f"summary key {key!r} missing from the run")
+            continue
+        if "min" in bound and v < bound["min"]:
+            problems.append(f"summary {key} = {v} regressed below baseline "
+                            f"min {bound['min']}")
+        if "max" in bound and v > bound["max"]:
+            problems.append(f"summary {key} = {v} regressed above baseline "
+                            f"max {bound['max']}")
+    for entry in base.get("cases", []):
+        rec = find(rows, entry["bench"], entry["case"])
+        if rec is None:
+            problems.append(f"record {entry['bench']}/{entry['case']} "
+                            f"missing from the run")
+            continue
+        v = lookup(rec, entry["metric"])
+        if not isinstance(v, (int, float)):
+            problems.append(f"{entry['bench']}/{entry['case']}: metric "
+                            f"{entry['metric']!r} missing")
+            continue
+        where = f"{entry['bench']}/{entry['case']}.{entry['metric']}"
+        if "min" in entry and v < entry["min"]:
+            problems.append(f"{where} = {v} regressed below baseline "
+                            f"min {entry['min']}")
+        if "max" in entry and v > entry["max"]:
+            problems.append(f"{where} = {v} regressed above baseline "
+                            f"max {entry['max']}")
+    if problems:
+        fail("; ".join(problems)
+             + " (intentional change? regenerate with --write, see module "
+               "docstring)")
+    n = len(base.get("summary", {})) + len(base.get("cases", []))
+    print(f"check_baseline: OK ({n} bounds held)", file=sys.stderr)
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    if args and args[0] == "--write":
+        path = args[1] if len(args) > 1 else DEFAULT_BASELINE
+        summary, rows = collect(sys.stdin)
+        write_baseline(path, summary, rows)
+        return
+    path = args[0] if args else DEFAULT_BASELINE
+    if not os.path.exists(path):
+        fail(f"baseline {path} not found; generate it with --write")
+    summary, rows = collect(sys.stdin)
+    check(path, summary, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,11 @@ invariants the MergePlan engine is built on:
    traffic by at least half the commit interval;
 4. defer schedule — the roofline-solved commit interval (hier3_defer_auto)
    is a real deferral (K >= 2 under the congested-DCI scenario) and the
-   measured top-level amortization realizes >= 80% of the predicted ~K-fold.
+   measured top-level amortization realizes >= 80% of the predicted ~K-fold;
+5. overlapped commits — the launch/land pipeline (hier3_overlap) hides at
+   least 50% of the measured top-level exchange time behind the step's
+   compute, and the overlap-aware solver's K is no larger than the
+   serialized solver's at the same compute bound.
 
 A regression in the classifier (hlo_cost), the permutes, the engine's
 stage compilation, or the defer-schedule solver breaks one of these long
@@ -44,7 +48,8 @@ def main() -> None:
             rows.append(rec)
     hier = {r.get("case"): r for r in rows if r.get("bench") == "hierarchy"}
     required = ("flat_butterfly", "hier3_rep", "hier3_lane",
-                "hier3_defer_amortized", "hier3_defer_auto")
+                "hier3_defer_amortized", "hier3_defer_auto",
+                "hier3_overlap")
     missing = [c for c in required if c not in hier]
     if missing:
         fail(f"missing hierarchy cases {missing} "
@@ -84,10 +89,28 @@ def main() -> None:
              f"does not match the solver's prediction "
              f"(predicted {auto.get('predicted_amortization_x')}x)")
 
+    ovl = hier["hier3_overlap"]
+    hidden = ovl.get("hidden_frac") or 0
+    if hidden < 0.5:
+        fail(f"overlapped commit hides only {hidden:.0%} of the top-level "
+             f"exchange time (exchange "
+             f"{ovl.get('top_exchange_time_us')}us vs compute "
+             f"{ovl.get('overlap_compute_time_us')}us); the launch/land "
+             f"pipeline no longer hides the commit behind the next step's "
+             f"compute")
+    k_ser = ovl.get("k_serialized")
+    k_ovl = ovl.get("k_overlap")
+    if k_ser is not None and k_ovl is not None and k_ovl > k_ser:
+        fail(f"overlap-aware solver picked K={k_ovl} > serialized K={k_ser}; "
+             f"hiding the exchange must never make deferring *more* "
+             f"attractive")
+
     print(f"check_level_costs: OK (top-level reduction "
           f"{flat[-1] / hier['hier3_lane']['wire_bytes_by_level_total'][-1]:.0f}x, "
           f"defer amortization {x}x/K={k}, "
-          f"auto schedule K={k_auto} -> {x_auto}x)", file=sys.stderr)
+          f"auto schedule K={k_auto} -> {x_auto}x, "
+          f"overlap hides {hidden:.0%} of the top-level exchange, "
+          f"K {k_ser} -> {k_ovl})", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,19 +1,37 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the full offline test suite plus the quick benchmark cells
-# (paper fig6, the hierarchical-merge wire comparison on a 3-level
-# chip/host/pod topology, and the analytic fabric model), with the
-# per-level wire-byte vector checked for cost-model regressions: bytes must
-# be monotonically cheaper at lower levels, the top level must shrink by
-# ~the group factor vs the flat butterfly, the merge-on-evict commit must
-# amortize top-level traffic by ~K, and the roofline-solved defer schedule
-# (hier3_defer_auto, congested-DCI scenario) must pick K >= 2 and realize
-# >= 0.8*K measured amortization (scripts/check_level_costs.py). The
-# benchmark stream is tagged JSON records (benchmarks/records.py), so stray
-# log lines cannot poison the gate.
+# Tier-1 gate, three stages:
+#
+# 1. fast tests — the offline suite minus the slow-marked subprocess tests;
+# 2. slow tests — the subprocess CLI / multi-device end-to-end tests, run
+#    as their own timed stage so latency regressions are visible in the log;
+# 3. benchmark gate — the quick benchmark cells (paper fig6, the
+#    hierarchical-merge wire comparison on a 3-level chip/host/pod
+#    topology, and the analytic fabric model), checked twice:
+#      * scripts/check_level_costs.py asserts the cost-model invariants:
+#        per-level bytes monotonically cheaper at lower levels, top level
+#        shrunk by ~the group factor vs the flat butterfly, merge-on-evict
+#        amortizing by ~K, the roofline-solved defer schedule
+#        (hier3_defer_auto, congested-DCI) picking K >= 2 with >= 0.8*K
+#        measured amortization, and the overlapped commit (hier3_overlap)
+#        hiding >= 50% of the top-level exchange time behind compute;
+#      * scripts/check_baseline.py gates the same record stream against
+#        the checked-in benchmarks/baseline.json, so perf regressions in
+#        the gated metrics FAIL CI instead of only printing (regenerate
+#        with --write after an intentional change).
+#
+# The benchmark stream is tagged JSON records (benchmarks/records.py), so
+# stray log lines cannot poison either gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+echo "=== stage 1: fast tests ==="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow"
+
+echo "=== stage 2: slow tests (timed) ==="
+time PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m slow
+
+echo "=== stage 3: benchmark gate ==="
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --quick --only fig6,hier,fabric \
-    | python scripts/check_level_costs.py
+    | python scripts/check_level_costs.py \
+    | python scripts/check_baseline.py benchmarks/baseline.json

@@ -9,11 +9,17 @@ from repro.core.ccache import (
     c_write,
     commit,
     commit_deferred,
+    commit_land,
+    commit_launch,
+    defer_cascade,
     hierarchical_merge,
     merge,
+    overlap_cascade,
     partial_merge,
     privatize,
     reduce_update,
+    settle_deferred,
+    settle_inflight,
     soft_merge,
     tree_merge,
 )

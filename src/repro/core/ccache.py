@@ -534,6 +534,50 @@ def settle_deferred(update: PyTree, axis_name, merge_fn: MergeFn,
                        force_tree)
 
 
+def settle_inflight(inflight: PyTree, axis_name, merge_fn: MergeFn,
+                    topology: Topology, compress: bool = False,
+                    force_tree: bool = False) -> PyTree:
+    """Run only the TOP deferred stage's exchange on a launched aggregate.
+
+    The land half of :func:`overlap_cascade` as a standalone call — used to
+    drain an in-flight commit at end of run (``DeferredTrainStep.flush``)
+    when there is no next step to overlap with.
+    """
+    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
+    if plan is None:
+        raise ValueError("settle_inflight needs a MergePlan with deferred "
+                         "levels (got a degenerate/flat topology)")
+    _, deferred = split_eager_deferred(
+        compile_plan(plan, size, merge_fn=merge_fn))
+    if not deferred:
+        raise ValueError("settle_inflight: plan has no deferred stages")
+    return _run_stages(inflight, axis_name, merge_fn, [deferred[-1]], size,
+                       force_tree)
+
+
+def commit_launch(pending: "PendingUpdate", axis_name, merge_fn: MergeFn,
+                  topology: Topology, compress: bool = False,
+                  force_tree: bool = False) -> PyTree:
+    """Launch half of a deferred commit: run the deferred levels' exchange.
+
+    Returns the settled full-scope aggregate *without* touching memory — the
+    in-flight value. Emitting the exchange as its own stage group is what
+    makes the commit overlappable: place this call in the same program as
+    the next step's compute (no data dependency between them) and XLA's
+    scheduler hides the expensive upper-level exchange behind that compute.
+    Land the result with :func:`commit_land`.
+    """
+    return settle_deferred(pending.update, axis_name, merge_fn, topology,
+                           compress=compress, force_tree=force_tree)
+
+
+def commit_land(inflight: PyTree, mem: PyTree, merge_fn: MergeFn,
+                key: Optional[jax.Array] = None) -> PyTree:
+    """Land half of a deferred commit: fold a launched (already exchanged)
+    aggregate into memory. Pure local work — no collectives."""
+    return merge_fn.tree_apply(mem, inflight, key=key)
+
+
 def commit_deferred(pending: "PendingUpdate", mem: PyTree, axis_name,
                     merge_fn: MergeFn, topology: Topology,
                     key: Optional[jax.Array] = None, compress: bool = False,
@@ -544,11 +588,13 @@ def commit_deferred(pending: "PendingUpdate", mem: PyTree, axis_name,
     (or ``soft_merge(..., plan=...)``): each rank holds the coalesced
     eager-scope aggregate, so only the deferred upper levels' exchange —
     the expensive cross-pod traffic — remains, paid once per K steps
-    instead of every step (the paper's mergeable bit, level 2).
+    instead of every step (the paper's mergeable bit, level 2). The
+    serialized composition of :func:`commit_launch` + :func:`commit_land`;
+    overlapping callers split the halves across two steps.
     """
-    u = settle_deferred(pending.update, axis_name, merge_fn, topology,
-                        compress=compress, force_tree=force_tree)
-    return merge_fn.tree_apply(mem, u, key=key)
+    u = commit_launch(pending, axis_name, merge_fn, topology,
+                      compress=compress, force_tree=force_tree)
+    return commit_land(u, mem, merge_fn, key=key)
 
 
 def deferred_stages_of(topology: Topology, axis_size: int,
@@ -621,6 +667,87 @@ def defer_cascade(delta: PyTree, pendings: Sequence[PyTree], due: int,
                 new_pendings[i + 1] = merge_fn.tree_combine(pendings[i + 1], x)
     settled = x if due == len(deferred) else None
     return new_pendings, settled
+
+
+def overlap_cascade(delta: PyTree, pendings: Sequence[PyTree],
+                    inflight: PyTree, due: int, land: bool, axis_name,
+                    merge_fn: MergeFn, topology: Topology,
+                    compress: bool = False, force_tree: bool = False
+                    ) -> tuple[list[PyTree], PyTree, Optional[PyTree]]:
+    """One step of the *overlapped* scheduled merge-on-evict cascade.
+
+    Like :func:`defer_cascade`, but the TOP deferred stage — the expensive
+    cross-pod exchange that otherwise serializes the full-commit step —
+    is split into launch/land halves one step apart:
+
+    * on a full-commit step (``due == len(deferred)``), the aggregate that
+      would have entered the top stage's exchange is *launched* instead:
+      returned as the new ``inflight`` buffer, with no top-level traffic
+      this step;
+    * on the following step (``land=True``), the top stage's exchange runs
+      on ``inflight`` — inside the same program as that step's compute,
+      with no data dependency between them, so the collective hides behind
+      the compute — and the settled full-scope aggregate is returned as
+      ``landed`` for the caller to fold into memory (``commit_land`` /
+      the optimizer), one step stale.
+
+    ``due``/``land`` are STATIC (host-side schedule decisions). Inner
+    deferred stages still commit inline — they ride cheap links. Returns
+    ``(new_pendings, new_inflight, landed)``; ``landed`` is ``None``
+    unless ``land``. A launched-then-landed cycle is numerically the same
+    aggregate ``defer_cascade`` would have settled on the launch step —
+    the overlap only delays *when* it lands (one-step-stale semantics).
+    """
+    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
+    if plan is None:
+        raise ValueError("overlap_cascade needs a MergePlan with deferred "
+                         "levels (got a degenerate/flat topology)")
+    stages = compile_plan(plan, size, merge_fn=merge_fn)
+    eager, deferred = split_eager_deferred(stages)
+    if not deferred:
+        raise ValueError("overlap_cascade: plan has no deferred stages "
+                         "(no :defer levels, or they all have size 1)")
+    pendings = list(pendings)
+    if len(pendings) != len(deferred):
+        raise ValueError(
+            f"overlap_cascade: {len(pendings)} pendings for "
+            f"{len(deferred)} deferred stages "
+            f"({[s.name for s in deferred]})")
+    n = len(deferred)
+    if not 0 <= due <= n:
+        raise ValueError(f"overlap_cascade: due={due} out of range [0, {n}]")
+
+    # Land first: the previous step's launched aggregate takes the top
+    # stage's exchange. It depends only on carried state, never on this
+    # step's delta — the independence that lets XLA overlap it.
+    landed = None
+    new_inflight = inflight
+    if land:
+        landed = _run_stages(inflight, axis_name, merge_fn, [deferred[-1]],
+                             size, force_tree)
+        new_inflight = merge_fn.tree_identity(inflight)
+
+    u = _run_stages(delta, axis_name, merge_fn, eager, size, force_tree)
+    x = merge_fn.tree_combine(pendings[0], u)
+    if due == 0:
+        return [x] + pendings[1:], new_inflight, landed
+
+    new_pendings = list(pendings)
+    for i in range(due):
+        new_pendings[i] = merge_fn.tree_identity(pendings[i])
+        if i == n - 1:
+            # Top stage: launch instead of exchange. x already folded in
+            # pendings[n-1] (combined below when i+1 < due), so inflight
+            # carries the cycle's complete pre-exchange aggregate.
+            new_inflight = x
+            break
+        x = _run_stages(x, axis_name, merge_fn, [deferred[i]], size,
+                        force_tree)
+        if i + 1 < due:
+            x = merge_fn.tree_combine(pendings[i + 1], x)
+        else:
+            new_pendings[i + 1] = merge_fn.tree_combine(pendings[i + 1], x)
+    return new_pendings, new_inflight, landed
 
 
 def reduce_update(update: PyTree, axis_name, merge: MergeFn,

@@ -44,11 +44,19 @@ class DeferSchedule:
     nested (``intervals[i+1] % intervals[i] == 0``). ``period`` — the top
     interval — is the full-commit cycle: one optimizer-visible commit per
     ``period`` accumulated steps.
+
+    ``overlap`` selects the overlapped commit pipeline: the top deferred
+    level's exchange is *launched* on the full-commit step and *landed* one
+    step later, inside the next step's program where it hides behind that
+    step's compute (``ccache.overlap_cascade``). The optimizer then steps
+    one step stale — K-step gradient accumulation applied with a one-step
+    delay.
     """
 
     level_names: tuple[str, ...]
     intervals: tuple[int, ...]
     predicted: Optional[dict] = dataclasses.field(default=None, compare=False)
+    overlap: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "level_names", tuple(self.level_names))
@@ -94,16 +102,20 @@ class DeferSchedule:
         return n
 
     @staticmethod
-    def fixed(k: int, level_names: Sequence[str]) -> "DeferSchedule":
+    def fixed(k: int, level_names: Sequence[str],
+              overlap: bool = False) -> "DeferSchedule":
         """Every deferred level commits every ``k`` steps (the manual
         ``--merge-defer K`` path)."""
         names = tuple(level_names)
-        return DeferSchedule(level_names=names, intervals=(int(k),) * len(names))
+        return DeferSchedule(level_names=names,
+                             intervals=(int(k),) * len(names),
+                             overlap=overlap)
 
     def as_dict(self) -> dict:
         out = {"level_names": list(self.level_names),
                "intervals": list(self.intervals),
-               "period": self.period}
+               "period": self.period,
+               "overlap": self.overlap}
         if self.predicted is not None:
             out["predicted"] = self.predicted
         return out
@@ -112,6 +124,8 @@ class DeferSchedule:
         parts = [f"{n}: K={k}" for n, k in zip(self.level_names,
                                                self.intervals)]
         s = ", ".join(parts) + f" (period {self.period})"
+        if self.overlap:
+            s += ", overlapped top-level commit (lands one step stale)"
         p = self.predicted
         if p:
             eager = p.get("wire_bytes_per_step_eager")
@@ -158,7 +172,8 @@ def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
                          fabric=None,
                          compute_s: float = 0.0, memory_s: float = 0.0,
                          target_fraction: float = 0.5,
-                         k_min: int = 1, k_max: int = 64) -> DeferSchedule:
+                         k_min: int = 1, k_max: int = 64,
+                         overlap: bool = False) -> DeferSchedule:
     """Solve per-level commit intervals for ``plan``'s deferred levels.
 
     ``wire_bytes_by_level`` is the measured per-level wire vector of the
@@ -168,6 +183,15 @@ def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
     one step. A deferred level's K is the smallest interval at which its
     amortized wire time stays under ``target_fraction`` of the per-step
     bound; intervals are then rounded up to nest.
+
+    With ``overlap``, the TOP deferred level's commit is launch/landed
+    (``ccache.overlap_cascade``): its exchange runs concurrently with the
+    next step's on-chip work, so up to ``max(compute_s, memory_s)`` of its
+    time hides for free. Only the *exposed* remainder needs amortizing —
+    a top-level exchange that fits entirely under the compute bound costs
+    ~0 at its commit step and solves to K = 1. Overlap therefore usually
+    moves the optimal K *down* (committing more often is free until the
+    exchange pokes out from behind the compute).
     """
     exec_levels = [lv for lv in plan.levels if lv.size > 1]
     names = (tuple(level_names) if level_names is not None
@@ -193,28 +217,37 @@ def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
                        if i not in deferred_ix)
     step_bound_s = max(compute_s, memory_s, eager_wire_s)
 
+    hide_budget_s = max(compute_s, memory_s) if overlap else 0.0
     intervals: list[int] = []
     per_level = []
     prev_k = 1
-    for lv in deferred:
+    for li, lv in enumerate(deferred):
         b = vec[idx[lv.name]]
         t = b / bws[idx[lv.name]]
-        if step_bound_s <= 0.0:
+        # Only the top deferred level's exchange is launch/landed; inner
+        # deferred commits still run inline at their due steps.
+        hidden = (min(t, hide_budget_s) if li == len(deferred) - 1 else 0.0)
+        exposed = t - hidden
+        if exposed <= 0.0:
+            k = 1  # fully hidden (or no traffic): committing is free
+        elif step_bound_s <= 0.0:
             # Nothing to hide the commit behind: defer as far as allowed.
             k = k_max
-        elif t <= 0.0:
-            k = 1  # the level has no measured traffic; deferring buys nothing
         else:
-            k = math.ceil(t / (target_fraction * step_bound_s))
+            k = math.ceil(exposed / (target_fraction * step_bound_s))
         k = max(k, k_min, prev_k)
         k = ((k + prev_k - 1) // prev_k) * prev_k      # nest on the level below
         if k > k_max:
             k = max(prev_k, (k_max // prev_k) * prev_k)
         intervals.append(k)
-        per_level.append({"name": lv.name, "interval": k,
-                          "bytes_per_step": b,
-                          "amortized_bytes_per_step": b / k,
-                          "time_s": t, "amortized_s": t / k})
+        entry = {"name": lv.name, "interval": k,
+                 "bytes_per_step": b,
+                 "amortized_bytes_per_step": b / k,
+                 "time_s": t, "amortized_s": (t - hidden) / k}
+        if overlap and li == len(deferred) - 1:
+            entry["hidden_s"] = hidden
+            entry["exposed_s"] = exposed
+        per_level.append(entry)
         prev_k = k
 
     eager_total = sum(vec)
@@ -231,5 +264,9 @@ def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
         "wire_bytes_per_step_deferred": amortized_total,
         "top_amortization_x": intervals[-1],
     }
+    if overlap:
+        predicted["overlap"] = True
+        predicted["hide_budget_s"] = hide_budget_s
     return DeferSchedule(level_names=tuple(lv.name for lv in deferred),
-                         intervals=tuple(intervals), predicted=predicted)
+                         intervals=tuple(intervals), predicted=predicted,
+                         overlap=overlap)

@@ -152,6 +152,16 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
                 compute_s=terms["compute_s"], memory_s=terms["memory_s"])
             rec["defer_schedule"] = sched.as_dict()
             print("defer schedule (top level deferred):", sched.describe())
+            # ... and with the launch/land overlap: the commit exchange
+            # hides behind the next step's compute bound, so only its
+            # exposed remainder needs amortizing — usually a smaller K.
+            sched_ovl = solve_defer_schedule(
+                what_if, walk["wire_bytes_by_level"], level_names,
+                compute_s=terms["compute_s"], memory_s=terms["memory_s"],
+                overlap=True)
+            rec["defer_schedule_overlap"] = sched_ovl.as_dict()
+            print("defer schedule (overlapped commit):",
+                  sched_ovl.describe())
 
         # MODEL_FLOPS: useful-work basis. 6ND train, 2ND forward-only
         # (N_active for MoE), D = tokens processed by the step.

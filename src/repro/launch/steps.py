@@ -138,7 +138,12 @@ def make_train_step(model, cfg, optimizer, num_microbatches: int = 1,
     ``tests/test_defer_schedule.py``). The return value is then a
     :class:`DeferredTrainStep` (one variant per due-count) rather than a
     plain function. Without a schedule, ``defer`` plans are rejected: the
-    optimizer would silently train on partially merged gradients.
+    optimizer would silently train on partially merged gradients. An
+    *overlapped* schedule (``DeferSchedule(overlap=True)``) double-buffers
+    the full commit: the launch step moves the cycle aggregate into
+    ``state["defer"]["inflight"]`` and the next step's program runs the
+    top-level exchange alongside its own compute, stepping the optimizer
+    one step stale (K-step accumulation with a one-step delay).
 
     All remaining mesh axes (tensor/model parallelism)
     stay on the compiler via shard_map's ``auto`` set, which is what lets
@@ -246,34 +251,75 @@ class DeferredTrainStep:
     step counter; ``jit()`` returns a dispatcher over per-variant jitted
     functions for the train loop. With nested intervals there are at most
     ``num_deferred + 1`` variants, so the compile count is bounded.
+
+    With an *overlapped* schedule (``schedule.overlap``), the full-commit
+    step launches the top-level exchange instead of running it: the cycle
+    aggregate moves into ``state["defer"]["inflight"]`` and the next step's
+    program runs the exchange concurrently with its own compute
+    (``land_variants[due]``), stepping the optimizer one step stale —
+    K-step gradient accumulation applied with a one-step delay. ``flush``
+    drains whatever is outstanding (an in-flight launch and/or a trailing
+    partial cycle) at end of run so no gradient mass is lost.
     """
 
     def __init__(self, variants, schedule: DeferSchedule, init_fn, dp: int,
-                 deferred_names: tuple):
+                 deferred_names: tuple, land_variants=None, flush_fn=None):
         self.variants = variants
+        self.land_variants = land_variants
         self.schedule = schedule
         self._init_fn = init_fn
+        self._flush_fn = flush_fn
         self.dp = dp
         self.deferred_names = deferred_names
 
+    @property
+    def overlap(self) -> bool:
+        return self.schedule.overlap
+
     def init_defer_state(self, params) -> dict:
-        """Zeroed pendings (merge identity) + step counter, as a state
-        entry: ``state["defer"] = step.init_defer_state(params)``."""
+        """Zeroed pendings (merge identity) + step counter (+ in-flight
+        buffer when overlapped), as a state entry:
+        ``state["defer"] = step.init_defer_state(params)``."""
         return self._init_fn(params)
 
     def due(self, state) -> int:
         return self.schedule.due_count(int(state["defer"]["t"]) + 1)
 
+    def land_due(self, state) -> bool:
+        """Whether this step lands a previously launched commit: true iff
+        the *previous* step was a full-commit (launch) step."""
+        t = int(state["defer"]["t"])
+        return (self.overlap and t >= 1
+                and self.schedule.due_count(t) == self.schedule.num_levels)
+
     def __call__(self, state, batch):
-        return self.variants[self.due(state)](state, batch)
+        fns = (self.land_variants if self.land_due(state)
+               else self.variants)
+        return fns[self.due(state)](state, batch)
 
     def jit(self, **jit_kwargs):
         jitted = [jax.jit(v, **jit_kwargs) for v in self.variants]
+        jitted_land = ([jax.jit(v, **jit_kwargs) for v in self.land_variants]
+                       if self.land_variants is not None else None)
 
         def call(state, batch):
-            return jitted[self.due(state)](state, batch)
+            fns = jitted_land if self.land_due(state) else jitted
+            return fns[self.due(state)](state, batch)
 
         return call
+
+    def flush(self, state) -> tuple[dict, Optional[dict]]:
+        """Final flush: drain everything outstanding at end of run.
+
+        Lands an in-flight launched cycle (overlap mode), then settles any
+        trailing partial cycle — the steps accumulated since the last full
+        commit — through every deferred level and steps the optimizer on
+        their mean. An N-step run with ``N % period != 0`` therefore loses
+        zero gradient mass versus the eager twin. Returns
+        ``(new_state, metrics)``; metrics is ``None`` when there was
+        nothing to flush.
+        """
+        return self._flush_fn(state)
 
 
 def _make_deferred_train_step(grads_of, optimizer, mesh: Mesh, plan,
@@ -289,6 +335,13 @@ def _make_deferred_train_step(grads_of, optimizer, mesh: Mesh, plan,
     due. The optimizer consumes ``settled / (dp * period)`` — the mean over
     ranks and over the cycle's steps — which makes K deferred commits
     numerically identical to accumulating K eagerly-merged mean gradients.
+
+    An overlapped schedule routes through ``ccache.overlap_cascade``: the
+    full-commit variant launches (cycle aggregate -> ``inflight``, no
+    top-level traffic), and every variant gains a ``land`` twin whose
+    program carries the top-level exchange on ``inflight`` next to the
+    step's own compute — independent values, so the scheduler overlaps
+    them — and steps the optimizer on the landed cycle one step stale.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -308,65 +361,148 @@ def _make_deferred_train_step(grads_of, optimizer, mesh: Mesh, plan,
             f"deferred stages {names}")
     n_def = len(deferred)
     period = schedule.period
+    overlap = schedule.overlap
     # Mean semantics only exist for additive merges (mirrors
     # merge_gradients' mean handling).
-    scale = (1.0 / (dp * period)
-             if grad_merge_fn.name in ("add", "int8_add") else 1.0)
+    additive = grad_merge_fn.name in ("add", "int8_add")
+    scale = 1.0 / (dp * period) if additive else 1.0
 
-    def make_variant(due: int):
-        def region(params, batch, *pendings):
+    def _opt_step(params, opt_state, settled, s):
+        grads = jax.tree.map(lambda g: g * jnp.asarray(s, g.dtype), settled)
+        return optimizer.step(params, grads, opt_state)
+
+    def _zero_metrics(loss):
+        return {"loss": loss, "grad_norm": jnp.zeros((), jnp.float32),
+                "lr": jnp.zeros((), jnp.float32)}
+
+    def make_variant(due: int, land: bool = False):
+        # One builder for both pipelines. The step's carried buffers are
+        # (inflight?, *pendings); the optimizer consumes a settled cycle on
+        # a serialized full-commit step or an overlapped land step.
+        commits = land if overlap else due == n_def
+
+        def region(params, batch, *bufs):
             with partition.manual_axes(axes_set):
                 loss, grads = grads_of(params, batch)
-            local = [jax.tree.map(lambda x: x[0], p) for p in pendings]
-            new_pendings, settled = ccache.defer_cascade(
-                grads, local, due, axis, grad_merge_fn, plan,
-                compress=merge_compress)
-            out = tuple(jax.tree.map(lambda x: x[None], p)
-                        for p in new_pendings)
+            local = [jax.tree.map(lambda x: x[0], b) for b in bufs]
+            if overlap:
+                local_if, *local_p = local
+                new_p, new_if, settled = ccache.overlap_cascade(
+                    grads, local_p, local_if, due, land, axis,
+                    grad_merge_fn, plan, compress=merge_compress)
+                new_bufs = (new_if,) + tuple(new_p)
+            else:
+                new_p, settled = ccache.defer_cascade(
+                    grads, local, due, axis, grad_merge_fn, plan,
+                    compress=merge_compress)
+                new_bufs = tuple(new_p)
+            out = tuple(jax.tree.map(lambda x: x[None], b)
+                        for b in new_bufs)
             loss = lax.pmean(loss, axis)
-            if due == n_def:
+            if commits:
                 return loss, out, settled
             return loss, out
 
-        in_specs = (P(), P(axis)) + (P(axis),) * n_def
-        out_specs = ((P(), P(axis), P()) if due == n_def
-                     else (P(), P(axis)))
+        n_buf = n_def + (1 if overlap else 0)
+        in_specs = (P(), P(axis)) + (P(axis),) * n_buf
+        out_specs = (P(), P(axis), P()) if commits else (P(), P(axis))
         sharded = shard_map(region, mesh=mesh, in_specs=in_specs,
                             out_specs=out_specs, check_rep=False, auto=auto)
 
         def step(state, batch):
             params = state["params"]
             d = state["defer"]
-            if due == n_def:
-                loss, pendings, settled = sharded(params, batch,
-                                                  *d["pending"])
-                grads = jax.tree.map(
-                    lambda g: g * jnp.asarray(scale, g.dtype), settled)
-                params, opt_state, stats = optimizer.step(
-                    params, grads, state["opt"])
+            bufs_in = (((d["inflight"],) if overlap else ())
+                       + tuple(d["pending"]))
+            if commits:
+                loss, bufs, settled = sharded(params, batch, *bufs_in)
+                params, opt_state, stats = _opt_step(
+                    params, state["opt"], settled, scale)
                 metrics = {"loss": loss, **stats}
             else:
-                loss, pendings = sharded(params, batch, *d["pending"])
+                loss, bufs = sharded(params, batch, *bufs_in)
                 opt_state = state["opt"]
-                metrics = {"loss": loss,
-                           "grad_norm": jnp.zeros((), jnp.float32),
-                           "lr": jnp.zeros((), jnp.float32)}
+                metrics = _zero_metrics(loss)
+            new_defer = {"t": d["t"] + 1}
+            if overlap:
+                new_defer["inflight"], bufs = bufs[0], bufs[1:]
+            new_defer["pending"] = tuple(bufs)
             new_state = {"params": params, "opt": opt_state,
-                         "defer": {"t": d["t"] + 1, "pending": pendings}}
+                         "defer": new_defer}
             return new_state, metrics
 
         return step
 
     def init_defer_state(params):
-        pending = tuple(
-            jax.tree.map(
+        def zeros_like_pending(_=None):
+            return jax.tree.map(
                 lambda p: grad_merge_fn.identity((dp,) + p.shape, p.dtype),
                 params)
-            for _ in range(n_def))
-        return {"t": jnp.zeros((), jnp.int32), "pending": pending}
+        pending = tuple(zeros_like_pending() for _ in range(n_def))
+        state = {"t": jnp.zeros((), jnp.int32), "pending": pending}
+        if overlap:
+            state["inflight"] = zeros_like_pending()
+        return state
+
+    # -- final flush: land any in-flight launch, settle the partial cycle --
+
+    def _land_flush_program():
+        def region(inflight):
+            local = jax.tree.map(lambda x: x[0], inflight)
+            return ccache.settle_inflight(local, axis, grad_merge_fn, plan,
+                                          compress=merge_compress)
+        return shard_map(region, mesh=mesh, in_specs=(P(axis),),
+                         out_specs=P(), check_rep=False, auto=auto)
+
+    def _partial_flush_program():
+        def region(*pendings):
+            local = [jax.tree.map(lambda x: x[0], p) for p in pendings]
+            zero = grad_merge_fn.tree_identity(local[0])
+            _, settled = ccache.defer_cascade(
+                zero, local, n_def, axis, grad_merge_fn, plan,
+                compress=merge_compress)
+            return settled
+        return shard_map(region, mesh=mesh, in_specs=(P(axis),) * n_def,
+                         out_specs=P(), check_rep=False, auto=auto)
+
+    def flush(state):
+        d = state["defer"]
+        t = int(d["t"])
+        params, opt_state = state["params"], state["opt"]
+        metrics = None
+        new_defer = dict(d)
+        reset = functools.partial(
+            jax.tree.map, lambda x: grad_merge_fn.identity(x.shape, x.dtype))
+        if (overlap and t >= 1
+                and schedule.due_count(t) == n_def):
+            # The last step launched a cycle that never landed.
+            landed = jax.jit(_land_flush_program())(d["inflight"])
+            params, opt_state, stats = _opt_step(params, opt_state, landed,
+                                                 scale)
+            new_defer["inflight"] = reset(d["inflight"])
+            metrics = {"flushed_inflight": True, **stats}
+        m = t % period
+        if m > 0:
+            # Trailing partial cycle: settle every deferred level on the
+            # outstanding pendings (zero delta — no new gradient) and step
+            # the optimizer on the mean over the m accumulated steps.
+            settled = jax.jit(_partial_flush_program())(*d["pending"])
+            pscale = 1.0 / (dp * m) if additive else 1.0
+            params, opt_state, stats = _opt_step(params, opt_state, settled,
+                                                 pscale)
+            new_defer["pending"] = tuple(reset(p) for p in d["pending"])
+            metrics = {**(metrics or {}), "flushed_steps": m, **stats}
+        if metrics is None:
+            return state, None
+        new_state = {"params": params, "opt": opt_state,
+                     "defer": new_defer}
+        return new_state, metrics
 
     variants = [make_variant(due) for due in range(n_def + 1)]
-    return DeferredTrainStep(variants, schedule, init_defer_state, dp, names)
+    land_variants = ([make_variant(due, land=True)
+                      for due in range(n_def + 1)] if overlap else None)
+    return DeferredTrainStep(variants, schedule, init_defer_state, dp, names,
+                             land_variants=land_variants, flush_fn=flush)
 
 
 class LoweredPlan:
@@ -449,15 +585,24 @@ def plan_train(cfg, shape_cfg, mesh: Mesh,
     fn = step
     if isinstance(step, DeferredTrainStep):
         defer_step = step
-        fn = step.variants[-1]
+        # The cost-walk superset program: for overlapped schedules that is
+        # the land twin of the full-commit variant (every level's exchange
+        # including the top-level land appears in one program).
+        fn = (step.land_variants[-1] if step.land_variants is not None
+              else step.variants[-1])
         defer_specs = jax.eval_shape(step.init_defer_state, param_specs)
         state_specs["defer"] = defer_specs
         axis = merge_axes_for(mesh, merge_plan)
-        state_sh["defer"] = {
+        defer_sh = {
             "t": NamedSharding(mesh, P()),
             "pending": jax.tree.map(
                 lambda _: NamedSharding(mesh, P(axis)),
                 defer_specs["pending"])}
+        if "inflight" in defer_specs:
+            defer_sh["inflight"] = jax.tree.map(
+                lambda _: NamedSharding(mesh, P(axis)),
+                defer_specs["inflight"])
+        state_sh["defer"] = defer_sh
     metrics_sh = NamedSharding(mesh, P())
     out_sh = (state_sh, {"loss": metrics_sh, "grad_norm": metrics_sh,
                          "lr": metrics_sh})

@@ -44,7 +44,10 @@ def _force_host_devices_for_topology() -> None:
             f"--xla_force_host_platform_device_count={n}")
 
 
-_force_host_devices_for_topology()
+if __name__ == "__main__":
+    # Only the CLI entry point may mutate XLA_FLAGS; importing this module
+    # as a library must not scan argv or touch the environment.
+    _force_host_devices_for_topology()
 
 import jax
 import jax.numpy as jnp
@@ -62,13 +65,17 @@ from repro.sharding.partition import sharding_rules
 
 
 def solve_defer_for_cli(merge_defer: str, cfg, shape_cfg, mesh, topology,
-                        dp: int, merge_compress: bool):
+                        dp: int, merge_compress: bool,
+                        overlap: bool = False):
     """Resolve --merge-defer into a DeferSchedule.
 
     ``auto`` compiles the plan's *eager twin* (defer flags stripped — so the
     deferred levels' per-step bytes are measurable), walks its HLO for the
     per-level wire vector, and solves the commit intervals against the
-    step's roofline. An integer fixes every deferred level's K.
+    step's roofline. An integer fixes every deferred level's K. With
+    ``overlap`` the solver only amortizes the top level's *exposed* time
+    (the launch/land pipeline hides up to a step's compute bound), and the
+    schedule's commits land one step stale.
     """
     from repro.core.defer_schedule import DeferSchedule, solve_defer_schedule
     from repro.core.ccache import deferred_stages_of
@@ -86,7 +93,7 @@ def solve_defer_for_cli(merge_defer: str, cfg, shape_cfg, mesh, topology,
                              f"got {merge_defer!r}")
         if k < 1:
             raise SystemExit("--merge-defer: K must be >= 1")
-        return DeferSchedule.fixed(k, deferred_names)
+        return DeferSchedule.fixed(k, deferred_names, overlap=overlap)
 
     from repro.launch import hlo_cost
     from repro.launch.hlo_analysis import roofline_terms
@@ -108,7 +115,8 @@ def solve_defer_for_cli(merge_defer: str, cfg, shape_cfg, mesh, topology,
                            level_names=names)
     schedule = solve_defer_schedule(
         topology, walk["wire_bytes_by_level"], names,
-        compute_s=terms["compute_s"], memory_s=terms["memory_s"])
+        compute_s=terms["compute_s"], memory_s=terms["memory_s"],
+        overlap=overlap)
     return schedule
 
 
@@ -141,6 +149,13 @@ def main() -> None:
                         "optimizer steps once per full commit on the "
                         "cycle's mean gradient (K-step gradient "
                         "accumulation)")
+    p.add_argument("--merge-overlap", action="store_true",
+                   help="overlap the deferred top-level commit with the "
+                        "next step's compute: the full-commit step launches "
+                        "the exchange and it lands one step later (the "
+                        "optimizer steps one step stale on the cycle's mean "
+                        "gradient). Requires --merge-defer; only valid for "
+                        "additive gradient merges")
     p.add_argument("--merge-lane-parallel", action="store_true",
                    help="shard the representative role over each unit's "
                         "lanes so upper-level exchanges bandwidth-"
@@ -218,6 +233,10 @@ def main() -> None:
     if args.merge_defer and not has_deferred:
         raise SystemExit("--merge-defer requires a --merge-topology with "
                          ":defer levels")
+    if args.merge_overlap and not args.merge_defer:
+        raise SystemExit("--merge-overlap requires --merge-defer (the "
+                         "launch/land pipeline splits a *deferred* commit "
+                         "across two steps)")
     if has_deferred:
         if not args.merge_defer:
             raise SystemExit(
@@ -227,12 +246,12 @@ def main() -> None:
                 ":defer flags for an eager merge every step")
         defer_schedule = solve_defer_for_cli(
             args.merge_defer, cfg, shape_cfg, mesh, topology, dp,
-            args.merge_compress)
+            args.merge_compress, overlap=args.merge_overlap)
         print("merge-defer schedule:", defer_schedule.describe())
         if (args.steps % defer_schedule.period) != 0:
-            print(f"warning: --steps {args.steps} is not a multiple of the "
+            print(f"note: --steps {args.steps} is not a multiple of the "
                   f"commit period {defer_schedule.period}; the trailing "
-                  f"partial cycle accumulates but never steps the optimizer")
+                  f"partial cycle is settled by the final flush")
     step_fn = make_train_step(model, cfg, optimizer, args.microbatches,
                               mesh=mesh, merge_topology=topology,
                               merge_compress=args.merge_compress,
@@ -268,6 +287,19 @@ def main() -> None:
             state, end = driver.run(state, start, args.steps - start)
         finally:
             prefetch.stop()
+        if defer_schedule is not None:
+            # Drain the deferred machinery: land any in-flight overlapped
+            # commit and settle the trailing partial cycle, so no gradient
+            # mass is dropped on the floor at end of run.
+            state, fmetrics = step_fn.flush(state)
+            if fmetrics is not None:
+                parts = []
+                if fmetrics.get("flushed_inflight"):
+                    parts.append("landed the in-flight commit")
+                if "flushed_steps" in fmetrics:
+                    parts.append(f"settled a {fmetrics['flushed_steps']}-step"
+                                 f" partial cycle")
+                print("final flush:", ", ".join(parts))
         losses = [e for e in driver.events if e.get("event") == "step"]
         if losses:
             print(f"steps {start}..{end}: loss {losses[0]['loss']:.4f} -> "

@@ -11,16 +11,24 @@ and get the same decorator surface running each property over a fixed,
 deterministically-seeded sample set (first example = minimal values, the rest
 pseudo-random from a per-test stable seed). Real hypothesis is used whenever
 it is installed; this stub trades shrinking/coverage for zero dependencies.
+
+Failures are replayable: a failing example reports its draw seed, and
+setting ``HYPOTHESIS_SEED=<seed>`` reruns the property on exactly that
+example (one draw from that seed, non-minimal) — so a property failure in
+CI reproduces locally with one env var instead of rerunning the whole
+sample set.
 """
 
 from __future__ import annotations
 
 import inspect
+import os
 import random
 import zlib
 
 _DEFAULT_EXAMPLES = 10
 _MAX_EXAMPLES_CAP = 12  # keep offline CI latency close to hypothesis defaults
+_SEED_ENV = "HYPOTHESIS_SEED"
 
 
 class _Strategy:
@@ -112,16 +120,41 @@ def given(**strategy_kwargs):
         seed_base = zlib.crc32(
             (fn.__module__ + "." + fn.__qualname__).encode())
 
+        def _one(seed, minimal, label):
+            rng = random.Random(seed)
+            drawn = {name: strat.sample(rng, minimal=minimal)
+                     for name, strat in sorted(strategy_kwargs.items())}
+            return drawn, label
+
         def wrapper(*args, **kwargs):
-            for i in range(n_examples):
-                rng = random.Random(seed_base + i)
-                drawn = {name: strat.sample(rng, minimal=(i == 0))
-                         for name, strat in sorted(strategy_kwargs.items())}
+            replay = os.environ.get(_SEED_ENV)
+            if replay is not None:
+                # Replay exactly the reported example: "minimal" for the
+                # fixed minimal-values example, an integer draw seed
+                # otherwise.
+                minimal = replay == "minimal"
+                seed = 0 if minimal else int(replay)
+                drawn, _ = _one(seed, minimal, replay)
                 try:
                     fn(*args, **kwargs, **drawn)
                 except Exception as e:
                     raise AssertionError(
-                        f"property failed on stub example {i}: {drawn!r}"
+                        f"property failed replaying {_SEED_ENV}={replay}: "
+                        f"{drawn!r}") from e
+                return
+            for i in range(n_examples):
+                seed = seed_base + i
+                minimal = i == 0
+                # Minimal values don't come from the rng, so example 0
+                # replays via the "minimal" sentinel, not a seed.
+                token = "minimal" if minimal else str(seed)
+                drawn, _ = _one(seed, minimal, token)
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on stub example {i}: {drawn!r}; "
+                        f"replay with {_SEED_ENV}={token}"
                     ) from e
 
         wrapper.__name__ = fn.__name__

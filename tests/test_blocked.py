@@ -61,6 +61,67 @@ def test_eviction_counters_fig9_shape():
     assert merges_for(2) > merges_for(8)
 
 
+def _ref_install_count(rows, ways, block_rows):
+    """Independent model of the cache's fill policy: count block installs.
+
+    Mirrors ``blocked.cop_scatter``'s victim selection exactly — hit way,
+    else first free way, else LRU by clock (first minimum on ties) — but
+    tracks only residency, no data. Every install under a write-only
+    trace becomes a dirty way, and every dirty way drains through exactly
+    one merge (evict or flush), so installs == total merges.
+    """
+    ids = [-1] * ways
+    clock = [0] * ways
+    installs = 0
+    for tick, r in enumerate(rows):
+        b = int(r) // block_rows
+        if b in ids:
+            way = ids.index(b)
+        else:
+            frees = [i for i, x in enumerate(ids) if x < 0]
+            way = frees[0] if frees else min(range(ways),
+                                             key=lambda i: clock[i])
+            ids[way] = b
+            installs += 1
+        clock[way] = tick
+    return installs
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       ways=st.sampled_from([2, 3, 4, 8]),
+       block_rows=st.sampled_from([2, 4]),
+       n=st.sampled_from([16, 48, 96]))
+@settings(max_examples=12, deadline=None)
+def test_property_counters_account_for_every_privatized_write(
+        seed, ways, block_rows, n):
+    """Counter conservation (Fig. 9's bookkeeping): across any access
+    trace, ``n_flush_merges + n_evict_merges`` equals the number of
+    privatized-block installs — every dirty block drains through exactly
+    one merge, none twice, none dropped — and a write-only trace has zero
+    silent evicts. The drained mass matches too: for ADD the final table
+    equals the initial plus every scattered value regardless of the
+    eviction pattern."""
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    rows_total, cols = 64, 2
+    table = jax.random.normal(k1, (rows_total, cols))
+    rows = jax.random.randint(k2, (n,), 0, rows_total)
+    vals = jax.random.normal(k3, (n, cols))
+
+    cache = blocked.init_cache(ways, block_rows, cols, table.dtype)
+    cache, t2 = blocked.cop_scatter(cache, table, rows, vals, ADD)
+    cache, t2 = blocked.flush(cache, t2, ADD)
+    s = blocked.stats(cache)
+
+    installs = _ref_install_count(np.asarray(rows), ways, block_rows)
+    assert s["evict_merges"] + s["flush_merges"] == installs, (s, installs)
+    assert s["silent_evicts"] == 0  # every access writes -> no clean ways
+
+    # Zero update mass lost or double-counted through evict/flush merges.
+    want = np.array(table)  # writable copy
+    np.add.at(want, np.asarray(rows), np.asarray(vals))
+    np.testing.assert_allclose(np.asarray(t2), want, rtol=1e-5, atol=1e-5)
+
+
 def test_max_merge_through_cache():
     table = jnp.full((8, 1), -10.0)
     rows = jnp.asarray([1, 1, 5])
