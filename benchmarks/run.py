@@ -30,7 +30,7 @@ def main() -> None:
                     help="hierarchy divisor vs Table 2 (1 = full size)")
     ap.add_argument("--only", default="",
                     help="comma list: fig6,fig7,fig8,fig9,table3,lm,hier,"
-                         "fabric")
+                         "fabric,apps_sharded")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -158,6 +158,30 @@ def main() -> None:
         summary["fabric_overlap_top_hidden_frac"] = round(
             1.0 - (ovl["time_by_level_s"][-1] / top_serial), 3) \
             if top_serial else None
+
+    if want("apps_sharded"):
+        from benchmarks.paper_apps import bench_apps_sharded
+        rows = bench_apps_sharded(quick=args.quick)
+        _emit(rows)
+        cors = [r for r in rows if "defer_max_err" in r]
+        for app in ("bfs", "pagerank", "kmeans"):
+            errs = [r["defer_max_err"] for r in cors if r.get("app") == app]
+            if errs:
+                summary[f"apps_{app}_defer_max_err"] = max(errs)
+        bfs_rows = [r for r in cors if r.get("app") == "bfs"]
+        if bfs_rows:
+            summary["apps_bfs_bitwise"] = all(
+                r.get("eager_max_err") == 0.0
+                and r.get("defer_max_err") == 0.0 for r in bfs_rows)
+        for app in ("bfs", "pagerank"):
+            ams = [r.get("top_level_amortization_x") for r in rows
+                   if str(r.get("case", "")).startswith(
+                       f"{app}_defer_amortized")]
+            ams = [a for a in ams if a]
+            if ams:
+                # min across mesh sizes: the weakest mesh still has to
+                # show the deferred top-level reduction
+                summary[f"apps_{app}_defer_amortization_x"] = min(ams)
 
     if want("lm"):
         from benchmarks.lm_tier import (bench_cscatter, bench_grad_accum,

@@ -21,11 +21,22 @@ may use ``name.index`` to index into a list (e.g.
 
 Regenerate after an intentional perf change::
 
-    PYTHONPATH=src:. python -m benchmarks.run --quick --only fig6,hier,fabric \
+    PYTHONPATH=src:. python -m benchmarks.run --quick \
+        --only fig6,hier,fabric,apps_sharded \
         | python scripts/check_baseline.py --write benchmarks/baseline.json
 
 The generator derives bounds from the current run with a 10% margin in the
 non-regressing direction.
+
+``--write-new`` extends a baseline *per record* instead of regenerating it
+wholesale: every existing bound present in the run is still gated (a
+regression fails without writing anything), bounds that the run does not
+produce are kept unchanged, and gated keys that have no bound yet are
+seeded from the current run with the 10% margin. Use it when a PR adds
+new benchmark cells — the new metrics get bounds without re-deriving (and
+silently loosening or tightening) the old ones::
+
+    ... | python scripts/check_baseline.py --write-new benchmarks/baseline.json
 """
 
 import json
@@ -56,6 +67,8 @@ SUMMARY_KEYS = {
     "fabric_defer_top_amortization_x": True,
     "fabric_hier_vs_flat_speedup_x": True,
     "fabric_overlap_top_hidden_frac": True,
+    "apps_bfs_defer_amortization_x": True,
+    "apps_pagerank_defer_amortization_x": True,
 }
 
 # (bench, case, metric, benefit?) gated per-record at generation time.
@@ -71,6 +84,11 @@ CASE_METRICS = [
     ("fabric", "flat_butterfly", "time_s", False),
     ("fabric", "hier_lane", "time_s", False),
     ("fabric", "hier_lane_defer8_overlap", "time_s", False),
+    # apps_sharded: the 8-shard mesh runs in both quick and full mode.
+    ("apps_sharded", "bfs_defer_amortized_s8",
+     "top_level_amortization_x", True),
+    ("apps_sharded", "pagerank_defer_amortized_s8",
+     "top_level_amortization_x", True),
 ]
 
 
@@ -138,14 +156,20 @@ def write_baseline(path: str, summary: dict, rows: list[dict]) -> None:
           f"bounds, {len(out['cases'])} case bounds)", file=sys.stderr)
 
 
-def check(path: str, summary: dict, rows: list[dict]) -> None:
-    with open(path) as f:
-        base = json.load(f)
+def audit(base: dict, summary: dict, rows: list[dict],
+          require_present: bool = True) -> list[str]:
+    """Gate the run against every bound in ``base``; returns problems.
+
+    ``require_present=False`` (the ``--write-new`` mode) skips bounds the
+    run does not produce instead of flagging them — a partial run may
+    extend a baseline but can never regress the parts it did produce.
+    """
     problems = []
     for key, bound in base.get("summary", {}).items():
         v = summary.get(key)
         if not isinstance(v, (int, float)):
-            problems.append(f"summary key {key!r} missing from the run")
+            if require_present:
+                problems.append(f"summary key {key!r} missing from the run")
             continue
         if "min" in bound and v < bound["min"]:
             problems.append(f"summary {key} = {v} regressed below baseline "
@@ -156,13 +180,15 @@ def check(path: str, summary: dict, rows: list[dict]) -> None:
     for entry in base.get("cases", []):
         rec = find(rows, entry["bench"], entry["case"])
         if rec is None:
-            problems.append(f"record {entry['bench']}/{entry['case']} "
-                            f"missing from the run")
+            if require_present:
+                problems.append(f"record {entry['bench']}/{entry['case']} "
+                                f"missing from the run")
             continue
         v = lookup(rec, entry["metric"])
         if not isinstance(v, (int, float)):
-            problems.append(f"{entry['bench']}/{entry['case']}: metric "
-                            f"{entry['metric']!r} missing")
+            if require_present:
+                problems.append(f"{entry['bench']}/{entry['case']}: metric "
+                                f"{entry['metric']!r} missing")
             continue
         where = f"{entry['bench']}/{entry['case']}.{entry['metric']}"
         if "min" in entry and v < entry["min"]:
@@ -171,6 +197,13 @@ def check(path: str, summary: dict, rows: list[dict]) -> None:
         if "max" in entry and v > entry["max"]:
             problems.append(f"{where} = {v} regressed above baseline "
                             f"max {entry['max']}")
+    return problems
+
+
+def check(path: str, summary: dict, rows: list[dict]) -> None:
+    with open(path) as f:
+        base = json.load(f)
+    problems = audit(base, summary, rows)
     if problems:
         fail("; ".join(problems)
              + " (intentional change? regenerate with --write, see module "
@@ -179,12 +212,60 @@ def check(path: str, summary: dict, rows: list[dict]) -> None:
     print(f"check_baseline: OK ({n} bounds held)", file=sys.stderr)
 
 
+def _bound(v: float, benefit: bool) -> dict:
+    return {"min": round(v * (1 - MARGIN), 6)} if benefit \
+        else {"max": round(v * (1 + MARGIN), 6)}
+
+
+def write_new_baseline(path: str, summary: dict, rows: list[dict]) -> None:
+    """Extend ``path`` per record: gate what exists, seed what doesn't."""
+    base = {"summary": {}, "cases": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            base = json.load(f)
+    problems = audit(base, summary, rows, require_present=False)
+    if problems:
+        fail("; ".join(problems)
+             + " (--write-new refuses to extend a baseline the run "
+               "regresses; fix the regression or regenerate with --write)")
+    added = []
+    for key, benefit in SUMMARY_KEYS.items():
+        if key in base.setdefault("summary", {}):
+            continue
+        v = summary.get(key)
+        if isinstance(v, (int, float)):
+            base["summary"][key] = _bound(v, benefit)
+            added.append(f"summary:{key}")
+    have = {(e["bench"], e["case"], e["metric"])
+            for e in base.setdefault("cases", [])}
+    for bench, case, metric, benefit in CASE_METRICS:
+        if (bench, case, metric) in have:
+            continue
+        rec = find(rows, bench, case)
+        v = lookup(rec, metric) if rec else None
+        if isinstance(v, (int, float)):
+            base["cases"].append({"bench": bench, "case": case,
+                                  "metric": metric, **_bound(v, benefit)})
+            added.append(f"{bench}/{case}.{metric}")
+    with open(path, "w") as f:
+        json.dump(base, f, indent=1)
+        f.write("\n")
+    print(f"check_baseline: extended {path} with {len(added)} new bounds "
+          f"({', '.join(added) if added else 'none'}); existing bounds "
+          f"held", file=sys.stderr)
+
+
 def main() -> None:
     args = sys.argv[1:]
     if args and args[0] == "--write":
         path = args[1] if len(args) > 1 else DEFAULT_BASELINE
         summary, rows = collect(sys.stdin)
         write_baseline(path, summary, rows)
+        return
+    if args and args[0] == "--write-new":
+        path = args[1] if len(args) > 1 else DEFAULT_BASELINE
+        summary, rows = collect(sys.stdin)
+        write_new_baseline(path, summary, rows)
         return
     path = args[0] if args else DEFAULT_BASELINE
     if not os.path.exists(path):

@@ -21,6 +21,17 @@ invariants the MergePlan engine is built on:
    compute, and the overlap-aware solver's K is no larger than the
    serialized solver's at the same compute bound.
 
+When the stream also carries ``apps_sharded`` records (the mesh-scaling
+companion study: BFS / PageRank / k-means as sharded MergePlan programs),
+the apps invariants are enforced too:
+
+6. apps correctness — BFS matches the single-device reference bitwise on
+   both the eager and the deferred plan (MIN is a lattice join); PageRank
+   and k-means match to float tolerance;
+7. apps defer amortization — the deferred supersteps amortize top-level
+   wire bytes by at least K/2 vs the all-eager superstep (PageRank's
+   deferred commit cycle must actually skip the cross-pod exchange).
+
 A regression in the classifier (hlo_cost), the permutes, the engine's
 stage compilation, or the defer-schedule solver breaks one of these long
 before it breaks correctness tests — this is the cost model's canary.
@@ -105,12 +116,52 @@ def main() -> None:
              f"hiding the exchange must never make deferring *more* "
              f"attractive")
 
+    apps = [r for r in rows if r.get("bench") == "apps_sharded"]
+    apps_msg = ""
+    if apps:
+        errs = [r for r in apps if "error" in r]
+        if errs:
+            fail(f"apps_sharded subprocess failed: {errs[0]['error']}")
+        cors = [r for r in apps if "defer_max_err" in r]
+        if not cors:
+            fail("apps_sharded records present but no correctness rows")
+        for r in cors:
+            app, case = r.get("app"), r.get("case")
+            if app == "bfs":
+                if r.get("eager_max_err") != 0.0 or r["defer_max_err"] != 0.0:
+                    fail(f"{case}: BFS no longer bitwise (eager "
+                         f"{r.get('eager_max_err')}, defer "
+                         f"{r['defer_max_err']}); the MIN lattice join must "
+                         f"reproduce the reference exactly")
+            else:
+                tol = 1e-4 if app == "pagerank" else 1e-3
+                worst = max(v for key_, v in r.items()
+                            if key_.endswith("_max_err"))
+                if worst > tol:
+                    fail(f"{case}: max err {worst} above tolerance {tol}")
+        amorts = [r for r in apps
+                  if str(r.get("case", "")).startswith(
+                      "pagerank_defer_amortized")]
+        if not amorts:
+            fail("apps_sharded present but no pagerank_defer_amortized "
+                 "record; the deferred-superstep wire study did not run")
+        for r in amorts:
+            ka = r.get("commit_every", 0)
+            xa = r.get("top_level_amortization_x") or 0
+            if xa < ka / 2:
+                fail(f"{r['case']}: deferred supersteps amortize top-level "
+                     f"bytes {xa}x < K/2 = {ka / 2}; the :defer plan no "
+                     f"longer skips the cross-pod exchange between commits")
+        apps_msg = (f", apps: {len(cors)} correctness rows OK, pagerank "
+                    f"defer amortization "
+                    f"{[r.get('top_level_amortization_x') for r in amorts]}x")
+
     print(f"check_level_costs: OK (top-level reduction "
           f"{flat[-1] / hier['hier3_lane']['wire_bytes_by_level_total'][-1]:.0f}x, "
           f"defer amortization {x}x/K={k}, "
           f"auto schedule K={k_auto} -> {x_auto}x, "
           f"overlap hides {hidden:.0%} of the top-level exchange, "
-          f"K {k_ser} -> {k_ovl})", file=sys.stderr)
+          f"K {k_ser} -> {k_ovl}{apps_msg})", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,10 @@
 #    as their own timed stage so latency regressions are visible in the log;
 # 3. benchmark gate — the quick benchmark cells (paper fig6, the
 #    hierarchical-merge wire comparison on a 3-level chip/host/pod
-#    topology, and the analytic fabric model), checked twice:
+#    topology, the analytic fabric model, and the sharded-apps
+#    mesh-scaling study: BFS/PageRank/k-means as MergePlan programs on a
+#    forced 8-device mesh, BFS gated bitwise and the PageRank deferred
+#    supersteps gated on top-level amortization), checked twice:
 #      * scripts/check_level_costs.py asserts the cost-model invariants:
 #        per-level bytes monotonically cheaper at lower levels, top level
 #        shrunk by ~the group factor vs the flat butterfly, merge-on-evict
@@ -32,6 +35,6 @@ time PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m slow
 
 echo "=== stage 3: benchmark gate ==="
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --quick --only fig6,hier,fabric \
+    python -m benchmarks.run --quick --only fig6,hier,fabric,apps_sharded \
     | python scripts/check_level_costs.py \
     | python scripts/check_baseline.py benchmarks/baseline.json

@@ -1,0 +1,15 @@
+"""The paper's applications as sharded MergePlan programs.
+
+BFS (MIN merge), PageRank (ADD merge with deferred commits across
+supersteps), and k-means (a defer/overlap client) — each expressed as a
+per-shard scatter phase (the Pallas ``cscatter`` kernel, or its jnp oracle
+under vmap) followed by a cross-shard merge through the hierarchical
+engine. See ``docs/merge_topology.md`` ("Sharded apps cookbook").
+"""
+
+from repro.apps.common import default_plan, scatter  # noqa: F401
+from repro.apps.bfs import bfs_reference, bfs_superstep, run_bfs  # noqa: F401
+from repro.apps.pagerank import (  # noqa: F401
+    pagerank_reference, pagerank_superstep, run_pagerank)
+from repro.apps.kmeans import (  # noqa: F401
+    kmeans_reference, kmeans_step, run_kmeans)

@@ -1,0 +1,162 @@
+"""Minibatch k-means as a defer/overlap client of the merge engine.
+
+The update stream is the classic commutative pair: per minibatch each shard
+scatters its points into per-centroid ``(sum, count)`` accumulators (the
+``cscatter`` additive merge over the assignment ids), and the centroid move
+``c = sum / count`` only needs the *aggregate* — so commits can ride the
+deferred cascade (accumulate K minibatches, settle the cross-pod exchange
+once per cycle) or the overlapped pipeline (the commit's exchange is
+launched at the cycle boundary and lands one step later, so shards assign
+the next minibatch against one-step-stale centroids — the standard
+asynchronous minibatch trade).
+
+The single-device reference runs the *same* commit schedule, so sharding +
+the hierarchical/deferred/overlapped merge machinery must reproduce it to
+float tolerance — the cross-path agreement contract, at app level.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.common import scatter
+from repro.core import ccache
+from repro.core.merge_functions import ADD
+
+
+def _assign(points, centroids):
+    """Nearest-centroid ids [B] for points [B, d] given centroids [k, d]."""
+    d2 = (jnp.sum(points * points, axis=1)[:, None]
+          - 2.0 * points @ centroids.T
+          + jnp.sum(centroids * centroids, axis=1)[None, :])
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def kmeans_step(points, centroids, *, use_pallas: bool = False):
+    """One shard's minibatch: assign + scatter into (sum, count) tables."""
+    k, d = centroids.shape
+    ids = _assign(points, centroids)
+    sums = scatter(jnp.zeros((k, d), jnp.float32), ids,
+                   points.astype(jnp.float32), kind="add",
+                   use_pallas=use_pallas)
+    ones = jnp.ones((points.shape[0], 1), jnp.float32)
+    counts = scatter(jnp.zeros((k, 1), jnp.float32), ids, ones, kind="add",
+                     use_pallas=use_pallas)
+    return {"sum": sums, "count": counts}
+
+
+def _move(centroids, settled):
+    cnt = settled["count"][:, 0]
+    moved = settled["sum"] / jnp.maximum(cnt, 1.0)[:, None]
+    return jnp.where((cnt > 0)[:, None], moved, centroids)
+
+
+def kmeans_reference(points_by_step, centroids0, *, commit_k: int,
+                     overlap: bool = False) -> np.ndarray:
+    """Single-device mirror of the sharded commit schedule.
+
+    ``points_by_step`` is [T, N, d] (all shards' minibatches concatenated
+    per step). Accumulates ``commit_k`` steps per commit; with ``overlap``
+    each commit is applied one step late (after the next step's
+    assignment), with a final flush.
+    """
+    pts = np.asarray(points_by_step, np.float32)
+    t_total, _, d = pts.shape
+    c = np.asarray(centroids0, np.float32).copy()
+    k = c.shape[0]
+    acc_s = np.zeros((k, d), np.float64)
+    acc_n = np.zeros((k,), np.float64)
+    inflight = None
+    for t in range(1, t_total + 1):
+        p = pts[t - 1]
+        d2 = ((p * p).sum(1)[:, None] - 2.0 * p @ c.T
+              + (c * c).sum(1)[None, :])
+        ids = np.argmin(d2, axis=1)
+        np.add.at(acc_s, ids, p.astype(np.float64))
+        np.add.at(acc_n, ids, 1.0)
+        if overlap and inflight is not None:
+            s, cnt = inflight
+            c = np.where((cnt > 0)[:, None],
+                         s / np.maximum(cnt, 1.0)[:, None], c)
+            inflight = None
+        if t % commit_k == 0:
+            if overlap:
+                inflight = (acc_s.copy(), acc_n.copy())
+            else:
+                c = np.where((acc_n > 0)[:, None],
+                             acc_s / np.maximum(acc_n, 1.0)[:, None], c)
+            acc_s[:] = 0.0
+            acc_n[:] = 0.0
+    if overlap and inflight is not None:
+        s, cnt = inflight
+        c = np.where((cnt > 0)[:, None],
+                     s / np.maximum(cnt, 1.0)[:, None], c)
+    return c.astype(np.float32)
+
+
+def run_kmeans(points_sh, centroids0, spmd, plan, axis_name, *,
+               commit_k: int, overlap: bool = False,
+               use_pallas: bool = False):
+    """Drive sharded minibatch k-means; returns shard-major centroids.
+
+    ``points_sh`` is [S, T, B, d] (per-shard minibatch stream). The commit
+    schedule routes through ``defer_cascade`` (or ``overlap_cascade`` with
+    ``overlap`` — commits land one step stale, final launch flushed via
+    ``settle_inflight``). The plan must carry the ``:defer`` levels the
+    schedule commits.
+    """
+    n_shards, t_total, _, d = points_sh.shape
+    k = centroids0.shape[0]
+    n_def = len(ccache.deferred_stages_of(plan, n_shards, merge_fn=ADD))
+    if n_def == 0:
+        raise ValueError("run_kmeans needs a plan with :defer levels (the "
+                         "commit schedule rides the deferred cascade)")
+    if t_total % commit_k != 0:
+        raise ValueError(f"steps ({t_total}) must be a multiple of "
+                         f"commit_k ({commit_k})")
+
+    c0 = jnp.broadcast_to(jnp.asarray(centroids0, jnp.float32),
+                          (n_shards,) + tuple(centroids0.shape))
+    like = {"sum": jnp.zeros((k, d), jnp.float32),
+            "count": jnp.zeros((k, 1), jnp.float32)}
+    zeros_p = jax.tree.map(
+        lambda x: jnp.zeros((n_shards,) + x.shape, x.dtype), like)
+    pendings = tuple(jax.tree.map(jnp.copy, zeros_p) for _ in range(n_def))
+
+    def make_step(due: int, land: bool):
+        def step(points, centroids, inflight, *pends):
+            delta = kmeans_step(points, centroids, use_pallas=use_pallas)
+            if overlap:
+                new_p, new_if, landed = ccache.overlap_cascade(
+                    delta, list(pends), inflight, due, land, axis_name,
+                    ADD, plan)
+            else:
+                new_p, landed = ccache.defer_cascade(
+                    delta, list(pends), due, axis_name, ADD, plan)
+                new_if = inflight
+            if landed is not None:
+                centroids = _move(centroids, landed)
+            return (centroids, new_if) + tuple(new_p)
+        return step
+
+    steps = {}
+    centroids = c0
+    inflight = jax.tree.map(jnp.copy, zeros_p)
+    for t in range(1, t_total + 1):
+        due = n_def if t % commit_k == 0 else 0
+        land = overlap and t > 1 and (t - 1) % commit_k == 0
+        key = (due, land)
+        if key not in steps:
+            steps[key] = make_step(due, land)
+        out = spmd(steps[key], points_sh[:, t - 1], centroids, inflight,
+                   *pendings)
+        centroids, inflight = out[0], out[1]
+        pendings = tuple(out[2:])
+    if overlap:
+        def flush(centroids, inflight):
+            landed = ccache.settle_inflight(inflight, axis_name, ADD, plan)
+            return _move(centroids, landed)
+        centroids = spmd(flush, centroids, inflight)
+    return centroids

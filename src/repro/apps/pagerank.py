@@ -1,0 +1,131 @@
+"""PageRank as a sharded ADD-merge program with deferred supersteps.
+
+Each superstep of the power iteration scatters ``alpha * r[src] / deg[src]``
+along every edge (the per-shard privatize-and-merge phase — ``cscatter``
+with the additive merge), then merges the partial contribution tables
+across shards:
+
+    r' = (1 - alpha) / n  +  merge_all_shards(scattered contributions)
+
+With the plan's top level ``:defer``-ed, the expensive cross-pod exchange
+runs only every K supersteps. Between commits each pod iterates on its
+eager-scope aggregate plus a *stale remote term* R captured at the last
+commit — extracting R from a settled aggregate is ``settled - own``, which
+is where the ADD algebra's ``invertible`` trait earns its keep. The
+iteration becomes an asynchronous fixed-point scheme with bounded staleness;
+since the PageRank operator is an alpha-contraction, it converges to the
+same ranks as the synchronous reference (within float tolerance), just in
+more supersteps. Ending the loop on a commit step makes the final view the
+fully-merged one.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.common import scatter
+from repro.core import ccache
+from repro.core.merge_functions import ADD
+
+
+def pagerank_reference(n: int, src, dst, *, alpha: float = 0.85,
+                       iters: int = 60) -> np.ndarray:
+    """Single-device synchronous power iteration (float64 for a tight gold)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    ok = (src >= 0) & (dst >= 0)
+    deg = np.zeros((n,), np.float64)
+    np.add.at(deg, src[ok], 1.0)
+    r = np.full((n,), 1.0 / n, np.float64)
+    base = (1.0 - alpha) / n
+    for _ in range(iters):
+        contrib = np.zeros((n,), np.float64)
+        w = alpha * r[src[ok]] / np.maximum(deg[src[ok]], 1.0)
+        np.add.at(contrib, dst[ok], w)
+        r = base + contrib
+    return r
+
+
+def _out_degree(n, src_ids, axis_name, plan, use_pallas):
+    ones = jnp.where(src_ids >= 0, 1.0, 0.0).astype(jnp.float32)
+    table = jnp.zeros((n, 1), jnp.float32)
+    local = scatter(table, src_ids, ones[:, None], kind="add",
+                    use_pallas=use_pallas)[:, 0]
+    return ccache.hierarchical_merge(local, axis_name, ADD, plan)
+
+
+def pagerank_superstep(r, src_ids, dst_ids, deg, *, alpha: float,
+                       use_pallas: bool = False):
+    """One shard's scatter phase: push alpha * r[src]/deg[src] to dst.
+
+    Returns the shard's partial contribution table [n]."""
+    n = r.shape[0]
+    ok = src_ids >= 0
+    safe = jnp.where(ok, src_ids, 0)
+    w = alpha * r[safe] / jnp.maximum(deg[safe], 1.0)
+    vals = jnp.where(ok, w, 0.0).astype(jnp.float32)
+    table = jnp.zeros((n, 1), jnp.float32)
+    out = scatter(table, jnp.where(ok, dst_ids, -1), vals[:, None],
+                  kind="add", use_pallas=use_pallas)
+    return out[:, 0]
+
+
+def run_pagerank(n: int, src_sh, dst_sh, spmd, plan, axis_name, *,
+                 alpha: float = 0.85, supersteps: int = 60,
+                 defer_k: int | None = None, use_pallas: bool = False):
+    """Drive sharded PageRank supersteps; returns shard-major ranks [S, n].
+
+    ``defer_k`` defers the plan's ``:defer`` levels to every K-th superstep
+    (asynchronous iteration with a stale remote term between commits). The
+    loop is extended to end on a commit step so the returned ranks are the
+    fully-merged view.
+    """
+    n_shards = src_sh.shape[0]
+    ADD.check_deferrable("run_pagerank")  # trivially true; documents intent
+    n_def = len(ccache.deferred_stages_of(plan, n_shards, merge_fn=ADD))
+    if defer_k is not None and n_def == 0:
+        raise ValueError("defer_k given but the plan has no deferred levels")
+
+    deg = spmd(
+        lambda src_ids: _out_degree(n, src_ids, axis_name, plan, use_pallas),
+        src_sh)
+    base = (1.0 - alpha) / n
+    r0 = jnp.full((n_shards, n), 1.0 / n, jnp.float32)
+
+    if defer_k is None:
+        def step(r, src_ids, dst_ids, deg):
+            contrib = pagerank_superstep(r, src_ids, dst_ids, deg,
+                                         alpha=alpha, use_pallas=use_pallas)
+            full = ccache.hierarchical_merge(contrib, axis_name, ADD, plan)
+            return base + full
+
+        r = r0
+        for _ in range(supersteps):
+            r = spmd(step, r, src_sh, dst_sh, deg)
+        return r
+
+    # Deferred supersteps: r_view = base + (eager-scope aggregate u) + (stale
+    # remote term R). At a commit, the full-scope aggregate is settled and
+    # R is re-extracted as full - u (ADD is invertible).
+    total = ((supersteps + defer_k - 1) // defer_k) * defer_k
+
+    def make_step(commit: bool):
+        def step(r, remote, src_ids, dst_ids, deg):
+            contrib = pagerank_superstep(r, src_ids, dst_ids, deg,
+                                         alpha=alpha, use_pallas=use_pallas)
+            u = ccache.partial_merge(contrib, axis_name, ADD, plan)
+            if commit:
+                full = ccache.settle_deferred(u, axis_name, ADD, plan)
+                remote = full - u
+                return base + full, remote
+            return base + u + remote, remote
+        return step
+
+    steps = {False: make_step(False), True: make_step(True)}
+    r = r0
+    remote = jnp.zeros((n_shards, n), jnp.float32)
+    for t in range(1, total + 1):
+        out = spmd(steps[t % defer_k == 0], r, remote, src_sh, dst_sh, deg)
+        r, remote = out
+    return r

@@ -173,7 +173,8 @@ def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
                          compute_s: float = 0.0, memory_s: float = 0.0,
                          target_fraction: float = 0.5,
                          k_min: int = 1, k_max: int = 64,
-                         overlap: bool = False) -> DeferSchedule:
+                         overlap: bool = False,
+                         merge_fn=None) -> DeferSchedule:
     """Solve per-level commit intervals for ``plan``'s deferred levels.
 
     ``wire_bytes_by_level`` is the measured per-level wire vector of the
@@ -192,7 +193,17 @@ def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
     ~0 at its commit step and solves to K = 1. Overlap therefore usually
     moves the optimal K *down* (committing more often is free until the
     exchange pokes out from behind the compute).
+
+    With ``merge_fn``, the merge's algebra traits gate the schedule before
+    any K is solved: non-deferrable merges (saturating/dropping adds) raise
+    outright, and ``overlap=True`` additionally requires a stale-tolerant
+    merge (scalable or idempotent) so the one-step-late landing is sound.
     """
+    if merge_fn is not None:
+        if overlap:
+            merge_fn.check_overlap("solve_defer_schedule(overlap=True)")
+        else:
+            merge_fn.check_deferrable("solve_defer_schedule")
     exec_levels = [lv for lv in plan.levels if lv.size > 1]
     names = (tuple(level_names) if level_names is not None
              else tuple(lv.name for lv in exec_levels))

@@ -59,7 +59,7 @@ def microbatched_value_and_grad(
 
         init = (merge_fn.tree_identity(params), jnp.zeros((), jnp.float32))
         (grads, loss_sum), _ = lax.scan(body, init, micro)
-        if mean and merge_fn.name == "add":
+        if mean and merge_fn.scalable:
             scale = 1.0 / num_microbatches
             grads = jax.tree.map(lambda g: g * jnp.asarray(scale, g.dtype), grads)
         loss = loss_sum / num_microbatches
@@ -92,7 +92,9 @@ def merge_gradients(
         axis_name = topology.resolve_axis(axis_name)
     merged = ccache.reduce_update(grads, axis_name, merge_fn,
                                   compress=compress, topology=topology)
-    if mean and merge_fn.name in ("add", "int8_add"):
+    # Mean semantics exist exactly for scalable merges (the delayed-mean
+    # algebra trait); idempotent/multiplicative merges pass through.
+    if mean and merge_fn.scalable:
         n = compat.axis_size(axis_name)
         merged = jax.tree.map(lambda g: g / n, merged)
     return merged

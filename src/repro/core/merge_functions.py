@@ -22,6 +22,36 @@ flexible path (tree ppermute merge).
 
 ``encode``/``decode`` optionally compress the update for the wire (gradient
 compression as a delta-merge property; beyond-paper, see DESIGN.md §3).
+
+Algebra traits
+--------------
+
+Deferral and overlap reorder *when* combined updates reach memory, and that
+is only sound for some algebras. Each ``MergeFn`` therefore carries traits
+the engine checks at plan-compile / schedule-solve time (instead of the old
+"the docs warn you" contract):
+
+    idempotent   combine(a, a) == a — lattice joins (max/min/or/and). A
+                 deferred commit settles by re-applying the join; seeing a
+                 contribution twice (stale overlap landing) is harmless.
+    scalable     scaling commutes with combine: combine(c*a, c*b) ==
+                 c*combine(a, b). This is what makes delayed *mean*
+                 semantics exist (divide one settled sum by the number of
+                 contributions) — ADD and its compressed variants.
+    invertible   every update has an inverse under combine (ADD/MUL/
+                 COMPLEX_MUL). Lets clients subtract their own contribution
+                 from a settled aggregate (e.g. remote-mass extraction in
+                 the sharded PageRank app).
+    deferrable   apply is a homomorphism over combine:
+                 apply(apply(m, u1), u2) == apply(m, combine(u1, u2)).
+                 False when apply observes memory between commits
+                 (saturating_add's threshold) or randomizes per commit
+                 (dropping_add) — deferring K steps then applying once
+                 changes what those applies observe.
+
+``deferrable`` gates ``:defer`` levels outright; overlapped (one-step-stale)
+commits additionally need ``scalable or idempotent`` so a late/duplicated
+landing cannot corrupt memory.
 """
 
 from __future__ import annotations
@@ -54,6 +84,12 @@ class MergeFn:
     # splits payloads on atom boundaries so structured combines see whole
     # elements.
     wire_atom: int = 1
+    # Algebra traits (see module docstring): engine-enforced validity for
+    # :defer levels, schedule-solved K, and overlapped stale commits.
+    idempotent: bool = False   # combine(a, a) == a
+    scalable: bool = False     # combine(c*a, c*b) == c*combine(a, b)
+    invertible: bool = False   # updates have inverses under combine
+    deferrable: bool = True    # apply distributes over combine
 
     def tree_delta(self, src: PyTree, upd: PyTree) -> PyTree:
         return jax.tree.map(self.delta, src, upd)
@@ -71,6 +107,60 @@ class MergeFn:
 
     def tree_identity(self, like: PyTree) -> PyTree:
         return jax.tree.map(lambda x: self.identity(x.shape, x.dtype), like)
+
+    # ---------------------------------------------------- derived validity
+
+    @property
+    def stale_tolerant(self) -> bool:
+        """May a one-step-stale (overlapped) commit land against this merge?
+
+        Scalable merges absorb the delay into the delayed-mean bookkeeping;
+        idempotent merges cannot be corrupted by duplicated or late joins.
+        Anything else would install a commit computed against a memory state
+        that no serialization of the update stream produces.
+        """
+        return self.scalable or self.idempotent
+
+    def settle_mode(self) -> Optional[str]:
+        """How a K-step deferred commit reconciles with per-step semantics.
+
+        ``"mean"``   — scalable: divide the settled sum by the contribution
+                       count (delayed mean, the gradient path).
+        ``"reapply"``— idempotent: the settled join is re-applied as-is;
+                       scaling would be meaningless and is skipped.
+        ``None``     — neither; a deferred train/commit loop has no sound
+                       way to install the aggregate. Callers must raise.
+        """
+        if self.scalable:
+            return "mean"
+        if self.idempotent:
+            return "reapply"
+        return None
+
+    def check_deferrable(self, context: str) -> None:
+        """Raise unless ``:defer`` is algebra-sound for this merge."""
+        if not self.deferrable:
+            raise ValueError(
+                f"{context}: merge '{self.name}' cannot defer commits — its "
+                "apply is not a homomorphism over combine (it observes "
+                "memory or randomizes per commit), so applying K coalesced "
+                "steps at once diverges from applying each step. Drop the "
+                ":defer flags or pick a deferrable merge.")
+        if self.needs_key:
+            raise ValueError(
+                f"{context}: merge '{self.name}' draws a PRNG key per apply; "
+                "deferred commits collapse K applies into one and would "
+                "change the sampling distribution. Drop the :defer flags.")
+
+    def check_overlap(self, context: str) -> None:
+        """Raise unless one-step-stale commit landings are algebra-sound."""
+        self.check_deferrable(context)
+        if not self.stale_tolerant:
+            raise ValueError(
+                f"{context}: merge '{self.name}' cannot land one-step-stale "
+                "overlapped commits — it is neither scalable (no delayed-"
+                "mean reconciliation) nor idempotent (a late landing is not "
+                "a harmless re-join). Use --merge-defer without overlap.")
 
 
 def _zeros(shape, dtype):
@@ -104,6 +194,8 @@ ADD = MergeFn(
     apply=lambda mem, u: mem + u,
     identity=_zeros,
     xla_reduce="add",
+    scalable=True,
+    invertible=True,
 )
 
 MUL = MergeFn(  # multiplicative updates: contribution is the factor upd/src
@@ -113,6 +205,7 @@ MUL = MergeFn(  # multiplicative updates: contribution is the factor upd/src
     apply=lambda mem, u: mem * u,
     identity=_ones,
     xla_reduce="mul",
+    invertible=True,
 )
 
 # Complex multiply (paper §6.3): represented as (..., 2) real/imag channels so
@@ -142,6 +235,7 @@ COMPLEX_MUL = MergeFn(
     apply=lambda mem, u: _cmul(mem, u),
     identity=_cones,
     wire_atom=2,
+    invertible=True,
 )
 
 MAX = MergeFn(
@@ -151,6 +245,7 @@ MAX = MergeFn(
     apply=jnp.maximum,
     identity=_neg_inf,
     xla_reduce="max",
+    idempotent=True,
 )
 
 MIN = MergeFn(
@@ -160,6 +255,7 @@ MIN = MergeFn(
     apply=jnp.minimum,
     identity=_pos_inf,
     xla_reduce="min",
+    idempotent=True,
 )
 
 BITWISE_OR = MergeFn(  # the paper's BFS bitmap merge
@@ -169,6 +265,7 @@ BITWISE_OR = MergeFn(  # the paper's BFS bitmap merge
     apply=lambda mem, u: mem | u,
     identity=_zeros,
     xla_reduce="or",
+    idempotent=True,
 )
 
 BITWISE_AND = MergeFn(
@@ -178,6 +275,7 @@ BITWISE_AND = MergeFn(
     apply=lambda mem, u: mem & u,
     identity=lambda shape, dtype: jnp.full(shape, -1, dtype),
     xla_reduce="and",
+    idempotent=True,
 )
 
 
@@ -198,6 +296,9 @@ def saturating_add(max_value: float, min_value: float | None = None) -> MergeFn:
         apply=_apply,
         identity=_zeros,
         xla_reduce="add",  # combine is plain add; only apply saturates
+        # The threshold is observed against memory at every commit: folding
+        # K commits into one changes which sums get clipped (paper §4.5).
+        deferrable=False,
     )
 
 
@@ -220,6 +321,7 @@ def dropping_add(drop_prob: float) -> MergeFn:
         identity=_zeros,
         xla_reduce=None,  # flexible path only: COUP cannot express this
         needs_key=True,
+        deferrable=False,  # one Bernoulli draw per commit, not per step
     )
 
 
@@ -249,6 +351,8 @@ def int8_compressed_add(scale_percentile: float = 100.0) -> MergeFn:
         xla_reduce=None,
         encode=_encode,
         decode=_decode,
+        scalable=True,
+        invertible=True,
     )
 
 

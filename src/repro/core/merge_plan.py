@@ -247,7 +247,11 @@ def compile_plan(plan: MergePlan, axis_size: int,
     With ``merge_fn``, per-level ``compress`` flags are checked against the
     merge's wire codec: a level asking for compression from a merge with no
     ``encode``/``decode`` raises instead of silently exchanging full-width
-    bytes the caller believes are compressed.
+    bytes the caller believes are compressed. ``:defer`` levels are likewise
+    checked against the merge's algebra traits: a non-deferrable merge
+    (apply observes memory or randomizes per commit — saturating/dropping
+    adds) raises here, at plan-compile time, instead of silently committing
+    K coalesced steps with different semantics.
     """
     plan.validate(axis_size)
     if merge_fn is not None and (merge_fn.encode is None
@@ -259,6 +263,11 @@ def compile_plan(plan: MergePlan, axis_size: int,
                 f"defines no encode/decode wire format — the exchange would "
                 f"silently stay uncompressed; use a codec merge (e.g. "
                 f"int8_compressed_add) or drop the compress flags")
+    if merge_fn is not None:
+        deferred = [lv.name for lv in plan.levels if lv.defer and lv.size > 1]
+        if deferred:
+            merge_fn.check_deferrable(
+                f"compile_plan: levels {deferred} set :defer")
     stages: list[LevelStage] = []
     strides = plan.strides()
     for i, lv in enumerate(plan.levels):

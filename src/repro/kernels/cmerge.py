@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-MERGE_KINDS = ("add", "sat_add", "max", "or")
+MERGE_KINDS = ("add", "sat_add", "max", "min", "or")
 
 
 def _kernel(ids_ref, dirty_ref, table_ref, src_ref, upd_ref, out_ref, *,
@@ -43,6 +43,8 @@ def _kernel(ids_ref, dirty_ref, table_ref, src_ref, upd_ref, out_ref, *,
         new = jnp.clip(s, sat_min, sat_max).astype(mem.dtype)
     elif kind == "max":
         new = jnp.maximum(mem, upd)
+    elif kind == "min":
+        new = jnp.minimum(mem, upd)
     else:  # or: the update copy accumulated bits on top of src
         new = mem | upd
     out_ref[...] = jnp.where(is_dirty, new, mem)

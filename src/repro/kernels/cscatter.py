@@ -19,7 +19,7 @@ TPU mapping of the paper's hardware:
   as proactive scheduling (DESIGN.md §2).
 * the ADD path turns the random scatter into a dense one-hot matmul
   ``onehot(ids)ᵀ @ vals`` — MXU-shaped, sequential-read, no gather/scatter in
-  the hot loop. MAX/OR paths use an in-kernel serial fold (vector ALU).
+  the hot loop. MAX/MIN/OR paths use an in-kernel serial fold (vector ALU).
 * per-row ``touched`` masks implement the paper's dirty-merge optimization:
   rows never written are merged as the identity (left bit-exact), and a block
   whose mask stays empty writes memory back unchanged.
@@ -39,7 +39,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import compat
 
-MERGE_KINDS = ("add", "sat_add", "max", "or")
+MERGE_KINDS = ("add", "sat_add", "max", "min", "or")
 
 
 def _is_float(dtype) -> bool:
@@ -52,6 +52,10 @@ def _identity(kind: str, dtype):
     if kind == "max":
         return jnp.asarray(jnp.finfo(dtype).min if _is_float(dtype)
                            else jnp.iinfo(dtype).min, dtype)
+    if kind == "min":
+        # iinfo covers unsigned dtypes too (identity = dtype's max value).
+        return jnp.asarray(jnp.finfo(dtype).max if _is_float(dtype)
+                           else jnp.iinfo(dtype).max, dtype)
     if kind == "or":
         return jnp.zeros((), dtype)
     raise ValueError(kind)
@@ -82,14 +86,19 @@ def _kernel(ids_ref, vals_ref, table_ref, out_ref, acc_ref, touched_ref, *,
         acc_ref[...] += contrib
         touched_ref[...] |= jnp.any(oh, axis=1, keepdims=True)
     else:
-        # Serial in-kernel fold (vector ALU): max / or have no MXU form.
+        # Serial in-kernel fold (vector ALU): max/min/or have no MXU form.
         def body(c, _):
             row = rel[c]
             ok = in_block[c]
             safe = jnp.where(ok, row, 0)
             cur = acc_ref[pl.dslice(safe, 1), :]
             v = vals[c][None].astype(acc_dtype)
-            new = jnp.maximum(cur, v) if kind == "max" else cur | v
+            if kind == "max":
+                new = jnp.maximum(cur, v)
+            elif kind == "min":
+                new = jnp.minimum(cur, v)
+            else:
+                new = cur | v
             acc_ref[pl.dslice(safe, 1), :] = jnp.where(ok, new, cur)
             t = touched_ref[pl.dslice(safe, 1), :]
             touched_ref[pl.dslice(safe, 1), :] = t | ok
@@ -110,6 +119,8 @@ def _kernel(ids_ref, vals_ref, table_ref, out_ref, acc_ref, touched_ref, *,
             new = s.astype(mem.dtype)
         elif kind == "max":
             new = jnp.maximum(mem, u.astype(mem.dtype))
+        elif kind == "min":
+            new = jnp.minimum(mem, u.astype(mem.dtype))
         else:  # or
             new = mem | u.astype(mem.dtype)
         out_ref[...] = jnp.where(touched, new, mem)      # dirty-merge skip

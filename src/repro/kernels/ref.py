@@ -19,6 +19,8 @@ def _combine(kind: str, a, b):
         return a + b
     if kind == "max":
         return jnp.maximum(a, b)
+    if kind == "min":
+        return jnp.minimum(a, b)
     if kind == "or":
         return a | b
     raise ValueError(kind)
@@ -28,8 +30,10 @@ def _identity_like(kind: str, x):
     if kind in ("add", "sat_add", "or"):
         return jnp.zeros_like(x)
     if jnp.issubdtype(x.dtype, jnp.floating):
-        return jnp.full_like(x, jnp.finfo(x.dtype).min)
-    return jnp.full_like(x, jnp.iinfo(x.dtype).min)
+        f = jnp.finfo(x.dtype)
+        return jnp.full_like(x, f.max if kind == "min" else f.min)
+    ii = jnp.iinfo(x.dtype)  # covers unsigned dtypes (min of uints needs max)
+    return jnp.full_like(x, ii.max if kind == "min" else ii.min)
 
 
 def _apply(kind: str, mem, u, sat_min=0.0, sat_max=0.0):
@@ -40,6 +44,8 @@ def _apply(kind: str, mem, u, sat_min=0.0, sat_max=0.0):
         return jnp.clip(s, sat_min, sat_max).astype(mem.dtype)
     if kind == "max":
         return jnp.maximum(mem, u.astype(mem.dtype))
+    if kind == "min":
+        return jnp.minimum(mem, u.astype(mem.dtype))
     return mem | u.astype(mem.dtype)
 
 
@@ -59,6 +65,11 @@ def ref_cscatter(table, ids, vals, kind="add", sat_min=0.0, sat_max=0.0):
                       if jnp.issubdtype(acc_dtype, jnp.floating)
                       else jnp.iinfo(acc_dtype).min)
         u = u.at[safe].max(v)
+    elif kind == "min":
+        v = jnp.where(valid[:, None], v, jnp.finfo(acc_dtype).max
+                      if jnp.issubdtype(acc_dtype, jnp.floating)
+                      else jnp.iinfo(acc_dtype).max)
+        u = u.at[safe].min(v)
     else:  # or — no at[].or_; serial fold over the stream
         def body(u, iv):
             i, val, ok = iv
@@ -112,6 +123,8 @@ def ref_cmerge(table, block_ids, dirty, src, upd, kind="add", sat_min=0.0,
             new = jnp.clip(s, sat_min, sat_max).astype(mem.dtype)
         elif kind == "max":
             new = jnp.maximum(mem, upd[i])
+        elif kind == "min":
+            new = jnp.minimum(mem, upd[i])
         else:
             new = mem | upd[i]
         new = jnp.where(ok, new, mem)

@@ -362,10 +362,22 @@ def _make_deferred_train_step(grads_of, optimizer, mesh: Mesh, plan,
     n_def = len(deferred)
     period = schedule.period
     overlap = schedule.overlap
-    # Mean semantics only exist for additive merges (mirrors
-    # merge_gradients' mean handling).
-    additive = grad_merge_fn.name in ("add", "int8_add")
-    scale = 1.0 / (dp * period) if additive else 1.0
+    # The merge's algebra decides how a settled cycle reaches the optimizer:
+    # scalable merges take the delayed mean over ranks x steps (mirrors
+    # merge_gradients), idempotent merges re-apply the settled join as-is,
+    # anything else has no sound deferred train path.
+    if overlap:
+        grad_merge_fn.check_overlap("make_train_step(overlapped schedule)")
+    settle_mode = grad_merge_fn.settle_mode()
+    if settle_mode is None:
+        raise ValueError(
+            f"make_train_step: merge '{grad_merge_fn.name}' has no deferred "
+            "settle mode — it is neither scalable (delayed mean) nor "
+            "idempotent (re-apply); a K-step deferred commit cannot be "
+            "reconciled with per-step optimizer semantics. Use an eager "
+            "plan (no :defer) for this merge.")
+    mean = settle_mode == "mean"
+    scale = 1.0 / (dp * period) if mean else 1.0
 
     def _opt_step(params, opt_state, settled, s):
         grads = jax.tree.map(lambda g: g * jnp.asarray(s, g.dtype), settled)
@@ -487,7 +499,7 @@ def _make_deferred_train_step(grads_of, optimizer, mesh: Mesh, plan,
             # outstanding pendings (zero delta — no new gradient) and step
             # the optimizer on the mean over the m accumulated steps.
             settled = jax.jit(_partial_flush_program())(*d["pending"])
-            pscale = 1.0 / (dp * m) if additive else 1.0
+            pscale = 1.0 / (dp * m) if mean else 1.0
             params, opt_state, stats = _opt_step(params, opt_state, settled,
                                                  pscale)
             new_defer["pending"] = tuple(reset(p) for p in d["pending"])

@@ -66,7 +66,7 @@ from repro.sharding.partition import sharding_rules
 
 def solve_defer_for_cli(merge_defer: str, cfg, shape_cfg, mesh, topology,
                         dp: int, merge_compress: bool,
-                        overlap: bool = False):
+                        overlap: bool = False, merge_fn=None):
     """Resolve --merge-defer into a DeferSchedule.
 
     ``auto`` compiles the plan's *eager twin* (defer flags stripped — so the
@@ -80,8 +80,18 @@ def solve_defer_for_cli(merge_defer: str, cfg, shape_cfg, mesh, topology,
     from repro.core.defer_schedule import DeferSchedule, solve_defer_schedule
     from repro.core.ccache import deferred_stages_of
 
+    if merge_fn is None:
+        from repro.core.merge_functions import ADD, int8_compressed_add
+        merge_fn = int8_compressed_add() if merge_compress else ADD
+    # Fail on algebra-invalid defer/overlap combinations before compiling
+    # anything — the fixed-K path must be gated too, not just auto.
+    if overlap:
+        merge_fn.check_overlap("--merge-defer with --merge-overlap")
+    else:
+        merge_fn.check_deferrable("--merge-defer")
+
     deferred_names = tuple(
-        s.name for s in deferred_stages_of(topology, dp))
+        s.name for s in deferred_stages_of(topology, dp, merge_fn=merge_fn))
     if not deferred_names:
         raise SystemExit("--merge-defer: the :defer levels all have size 1 "
                          "and compile away; drop the flags")
@@ -116,7 +126,7 @@ def solve_defer_for_cli(merge_defer: str, cfg, shape_cfg, mesh, topology,
     schedule = solve_defer_schedule(
         topology, walk["wire_bytes_by_level"], names,
         compute_s=terms["compute_s"], memory_s=terms["memory_s"],
-        overlap=overlap)
+        overlap=overlap, merge_fn=merge_fn)
     return schedule
 
 

@@ -1,0 +1,180 @@
+"""The paper's apps (BFS / PageRank / k-means) as sharded MergePlan
+programs — the algebra traits exercised end-to-end.
+
+Fast tests drive the per-shard step functions under ``vmap(axis_name=...)``
+with the jnp scatter oracle; each app pins one row of the trait matrix:
+
+* BFS rides MIN (idempotent): the deferred plan settles by *re-apply* and
+  must still match the single-device reference **bitwise**;
+* PageRank rides ADD (scalable + invertible): between commits each scope
+  iterates on a stale remote term ``settled_full - own``, and the
+  alpha-contraction converges to the synchronous reference;
+* k-means rides ADD through ``defer_cascade`` / ``overlap_cascade``: the
+  reference mirrors the exact commit schedule, so agreement is to float
+  tolerance by construction.
+
+The slow test at the bottom reruns all three through ``run_app`` on a
+real forced-8-device ``shard_map`` mesh with the Pallas scatter kernel —
+the acceptance criterion's configuration.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import (bfs_reference, run_bfs, pagerank_reference,
+                        run_pagerank, kmeans_reference, run_kmeans)
+from repro.apps.bfs import INF
+from repro.apps.common import default_plan, shard_edges
+
+ENV = dict(os.environ, PYTHONPATH=os.pathsep.join(
+    [os.path.abspath("src"), os.environ.get("PYTHONPATH", "")]))
+ENV.pop("XLA_FLAGS", None)
+
+AXIS = "shards"
+
+
+def _spmd(fn, *args):
+    return jax.vmap(fn, axis_name=AXIS)(*args)
+
+
+def _graph(n, e, seed):
+    rng = np.random.default_rng(seed)
+    # self-sources keep every vertex out-connected (degree >= 1)
+    src = np.concatenate([rng.integers(0, n, e), np.arange(n)])
+    dst = np.concatenate([rng.integers(0, n, e), rng.integers(0, n, n)])
+    return src.astype(np.int32), dst.astype(np.int32)
+
+
+def test_default_plan_shapes():
+    p8 = default_plan(8)
+    assert [(lv.name, lv.size) for lv in p8.levels] == \
+        [("chip", 2), ("host", 2), ("pod", 2)]
+    assert not any(lv.defer for lv in p8.levels)
+    p8d = default_plan(8, defer_top=True)
+    assert [lv.defer for lv in p8d.levels] == [False, False, True]
+    p16 = default_plan(16)
+    assert [(lv.name, lv.size) for lv in p16.levels] == \
+        [("chip", 4), ("host", 2), ("pod", 2)]
+
+
+def test_bfs_vmap_eager_and_deferred_bitwise():
+    n_shards, n, e = 8, 24, 64
+    src, dst = _graph(n, e, 0)
+    ref = bfs_reference(n, src, dst, 0)
+    src_sh, dst_sh = map(jnp.asarray, shard_edges(src, dst, n_shards))
+    dist0 = jnp.full((n_shards, n), INF, jnp.int32).at[:, 0].set(0)
+
+    eager = run_bfs(dist0, src_sh, dst_sh, _spmd, default_plan(n_shards),
+                    AXIS, supersteps=n)
+    np.testing.assert_array_equal(np.asarray(eager[0]), ref)
+
+    # defer_k = 5 with supersteps = 24 exercises the trailing flush too
+    defer = run_bfs(dist0, src_sh, dst_sh, _spmd,
+                    default_plan(n_shards, defer_top=True), AXIS,
+                    supersteps=5 * n, defer_k=5)
+    np.testing.assert_array_equal(np.asarray(defer[0]), ref)
+    # every shard holds the fully merged view
+    np.testing.assert_array_equal(np.asarray(defer),
+                                  np.broadcast_to(ref, defer.shape))
+
+
+def test_pagerank_vmap_eager_and_deferred():
+    n_shards, n, e = 8, 24, 96
+    alpha, k = 0.5, 4
+    src, dst = _graph(n, e, 1)
+    src_sh, dst_sh = map(jnp.asarray, shard_edges(src, dst, n_shards))
+
+    iters = 32
+    ref = pagerank_reference(n, src, dst, alpha=alpha, iters=iters)
+    eager = run_pagerank(n, src_sh, dst_sh, _spmd, default_plan(n_shards),
+                         AXIS, alpha=alpha, supersteps=iters)
+    np.testing.assert_allclose(np.asarray(eager[0], np.float64), ref,
+                               rtol=1e-4, atol=1e-6)
+
+    # deferred: asynchronous iteration with a stale remote term converges
+    # to the same fixpoint given enough supersteps (alpha-contraction)
+    iters_d = 16 * k
+    ref_d = pagerank_reference(n, src, dst, alpha=alpha, iters=iters_d)
+    defer = run_pagerank(n, src_sh, dst_sh, _spmd,
+                         default_plan(n_shards, defer_top=True), AXIS,
+                         alpha=alpha, supersteps=iters_d, defer_k=k)
+    np.testing.assert_allclose(np.asarray(defer[0], np.float64), ref_d,
+                               rtol=2e-3, atol=1e-6)
+
+
+@pytest.mark.parametrize("commit_k,overlap", [(4, False), (4, True),
+                                              (2, True)])
+def test_kmeans_vmap_matches_schedule_mirror(commit_k, overlap):
+    n_shards, k, d, b, t = 8, 4, 3, 8, 8
+    rng = np.random.default_rng(2)
+    pts = rng.normal(size=(n_shards, t, b, d)).astype(np.float32)
+    c0 = rng.normal(size=(k, d)).astype(np.float32)
+    pts_ref = pts.transpose(1, 0, 2, 3).reshape(t, n_shards * b, d)
+
+    ref = kmeans_reference(pts_ref, c0, commit_k=commit_k, overlap=overlap)
+    got = run_kmeans(jnp.asarray(pts), jnp.asarray(c0), _spmd,
+                     default_plan(n_shards, defer_top=True), AXIS,
+                     commit_k=commit_k, overlap=overlap)
+    np.testing.assert_allclose(np.asarray(got[0]), ref,
+                               rtol=2e-5, atol=2e-5)
+    # centroids replicated across shards
+    np.testing.assert_allclose(np.asarray(got),
+                               np.broadcast_to(ref, got.shape),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_app_drivers_validate_plans():
+    n_shards = 8
+    plan = default_plan(n_shards)  # no :defer levels
+    dist0 = jnp.full((n_shards, 4), INF, jnp.int32)
+    edges = jnp.zeros((n_shards, 2), jnp.int32)
+    with pytest.raises(ValueError, match="deferred"):
+        run_bfs(dist0, edges, edges, _spmd, plan, AXIS, supersteps=1,
+                defer_k=2)
+    with pytest.raises(ValueError, match="deferred"):
+        run_pagerank(4, edges, edges, _spmd, plan, AXIS, supersteps=1,
+                     defer_k=2)
+    pts = jnp.zeros((n_shards, 4, 2, 3))
+    c0 = jnp.zeros((2, 3))
+    with pytest.raises(ValueError, match="defer"):
+        run_kmeans(pts, c0, _spmd, plan, AXIS, commit_k=2)
+    with pytest.raises(ValueError, match="multiple"):
+        run_kmeans(pts, c0, _spmd, default_plan(n_shards, defer_top=True),
+                   AXIS, commit_k=3)
+
+
+@pytest.mark.slow
+def test_apps_on_forced_8_device_mesh():
+    """Acceptance: sharded apps on a real >= 8-device host mesh with the
+    Pallas scatter kernel match single-device references (bitwise for
+    BFS's MIN lattice, tolerance for float ADD)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        from repro.apps.sharded import run_app
+        out = {app: run_app(app, 8, defer_k=4, use_pallas=True,
+                            n_vertices=24, n_edges=96)
+               for app in ("bfs", "pagerank", "kmeans")}
+        print("RESULT " + json.dumps(out))
+    """)
+    r = subprocess.run([sys.executable, "-c", script], env=ENV,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = next(ln for ln in r.stdout.splitlines()
+                if ln.startswith("RESULT "))
+    out = json.loads(line[len("RESULT "):])
+    assert out["bfs"]["eager_max_err"] == 0.0
+    assert out["bfs"]["defer_max_err"] == 0.0
+    assert out["pagerank"]["eager_max_err"] < 1e-4
+    assert out["pagerank"]["defer_max_err"] < 1e-4
+    assert out["kmeans"]["defer_max_err"] < 1e-3
+    assert out["kmeans"]["overlap_max_err"] < 1e-3

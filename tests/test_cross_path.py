@@ -10,8 +10,9 @@ any divergence is an engine bug, not a modeling choice.
 This suite drives randomized N-level topologies x merge functions x
 execution flags through all four paths and asserts they agree:
 
-* exact (bitwise-equal sums) for ADD/MAX — updates are integer-valued
-  floats, so reassociation cannot round differently;
+* exact (bitwise-equal) for ADD/MAX/MIN — updates are integer-valued
+  floats, so reassociation cannot round differently — and for the
+  BITWISE_OR lattice join on int32 bitmaps (the paper's BFS merge);
 * tolerance-bounded for COMPLEX_MUL (multiplication reordering) and the
   int8-compressed wire format (per-round quantization).
 """
@@ -45,7 +46,12 @@ def _updates(merge_name, seed, size):
         base = jax.random.normal(key, (size, 3, 2)) * 0.1
         return {"a": base + jnp.asarray([1.0, 0.0]),
                 "b": base[:, :2] * 0.5 + jnp.asarray([1.0, 0.0])}
-    # Integer-valued floats: ADD/MAX reassociate exactly.
+    if merge_name == "or":
+        # int32 bitmaps: the lattice join is exact by construction.
+        bits = jax.random.randint(key, (size, 2, 5), 0, 1 << 15)
+        return {"a": bits.astype(jnp.int32),
+                "b": (bits[:, 0, :3] << 3).astype(jnp.int32)}
+    # Integer-valued floats: ADD/MAX/MIN reassociate exactly.
     ints = jax.random.randint(key, (size, 2, 5), -8, 9)
     return {"a": ints.astype(jnp.float32),
             "b": ints[:, 0, :3].astype(jnp.float32) * 2.0}
@@ -56,6 +62,10 @@ def _merge_and_tols(merge_name, compressed):
         return mf.COMPLEX_MUL, dict(rtol=1e-4, atol=1e-5)
     if merge_name == "max":
         return mf.MAX, dict(rtol=0, atol=0)
+    if merge_name == "min":
+        return mf.MIN, dict(rtol=0, atol=0)
+    if merge_name == "or":
+        return mf.BITWISE_OR, dict(rtol=0, atol=0)
     if compressed:
         # int8 wire quantization: each round rounds to ~amax/254.
         return mf.int8_compressed_add(), dict(rtol=0.05, atol=6.0)
@@ -81,7 +91,8 @@ TOPOLOGIES = [
 @settings(max_examples=12, deadline=None)
 @given(seed=st.integers(min_value=0, max_value=10**6),
        sizes=st.sampled_from(TOPOLOGIES),
-       merge_name=st.sampled_from(["add", "max", "complex_mul"]),
+       merge_name=st.sampled_from(["add", "max", "min", "or",
+                                   "complex_mul"]),
        lane=st.booleans(),
        compressed=st.booleans(),
        n_defer=st.integers(min_value=0, max_value=2))

@@ -17,7 +17,7 @@ TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("kind", ["add", "max", "sat_add"])
+@pytest.mark.parametrize("kind", ["add", "max", "min", "sat_add"])
 @pytest.mark.parametrize("r,d,n,br,ch", [
     (64, 8, 128, 16, 32),
     (128, 32, 256, 32, 64),
@@ -42,6 +42,21 @@ def test_cscatter_or_int():
     vals = jax.random.randint(jax.random.key(2), (128, 8), 0, 2**30)
     out = cscatter(table, ids, vals, kind="or", block_rows=16, chunk=32)
     gold = ref.ref_cscatter_serial(table, ids, vals, "or")
+    assert jnp.array_equal(out, gold)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.uint32])
+def test_cscatter_min_int(dtype):
+    """MIN's identity must be the dtype's max — iinfo covers unsigned,
+    where a float-inf or signed sentinel would corrupt untouched rows."""
+    table = jnp.full((64, 8), jnp.iinfo(dtype).max, dtype)
+    ids = jax.random.randint(jax.random.key(1), (128,), -3, 64)
+    vals = jax.random.randint(
+        jax.random.key(2), (128, 8), 0, 2**31 - 1).astype(dtype)
+    if dtype == jnp.uint32:
+        vals = vals * 2  # exercise values above int32 range
+    out = cscatter(table, ids, vals, kind="min", block_rows=16, chunk=32)
+    gold = ref.ref_cscatter_serial(table, ids, vals, "min")
     assert jnp.array_equal(out, gold)
 
 
@@ -73,7 +88,7 @@ def test_cscatter_untouched_rows_bit_exact():
 # ---------------------------------------------------------------- cmerge
 
 
-@pytest.mark.parametrize("kind", ["add", "max", "sat_add"])
+@pytest.mark.parametrize("kind", ["add", "max", "min", "sat_add"])
 def test_cmerge_vs_ref(kind):
     r, d, w, br = 64, 16, 4, 8
     table = jax.random.normal(jax.random.key(0), (r, d))

@@ -99,6 +99,102 @@ def test_int8_codec_roundtrip_error():
     assert float(jnp.max(jnp.abs(dec - u))) <= 3 / 127 + 1e-6
 
 
+# ------------------------------------------------------------ algebra traits
+
+
+IDEMPOTENT = [mf.MAX, mf.MIN, mf.BITWISE_OR, mf.BITWISE_AND]
+SCALABLE = [mf.ADD, mf.int8_compressed_add()]
+
+
+@pytest.mark.parametrize("m", IDEMPOTENT, ids=lambda m: m.name)
+@given(a=ints)
+@settings(max_examples=25, deadline=None)
+def test_idempotent_trait_holds(m, a):
+    """Merges claiming ``idempotent`` must satisfy combine(a, a) == a —
+    the property that licenses the re-apply settle mode."""
+    assert m.idempotent
+    x = jnp.asarray(a, jnp.int32)
+    assert jnp.array_equal(m.combine(x, x), x)
+
+
+@pytest.mark.parametrize("m", SCALABLE, ids=lambda m: m.name)
+@given(a=floats, b=floats)
+@settings(max_examples=25, deadline=None)
+def test_scalable_trait_holds(m, a, b):
+    """Merges claiming ``scalable`` must commute with scaling —
+    s * (a ⊕ b) == (s * a) ⊕ (s * b) — the mean-settle contract."""
+    assert m.scalable
+    a, b = (jnp.asarray(x, jnp.float32) for x in (a, b))
+    s = 0.125
+    np.testing.assert_allclose(np.asarray(s * m.combine(a, b)),
+                               np.asarray(m.combine(s * a, s * b)),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m", [mf.ADD, mf.MUL, mf.COMPLEX_MUL],
+                         ids=lambda m: m.name)
+def test_invertible_trait_declared(m):
+    assert m.invertible
+
+
+def test_non_idempotent_merges_do_not_claim_it():
+    assert not mf.ADD.idempotent
+    assert not mf.saturating_add(5.0).idempotent
+
+
+def test_stale_tolerant_and_settle_mode_derivation():
+    assert mf.ADD.stale_tolerant and mf.ADD.settle_mode() == "mean"
+    assert mf.MIN.stale_tolerant and mf.MIN.settle_mode() == "reapply"
+    assert not mf.COMPLEX_MUL.stale_tolerant
+    assert mf.COMPLEX_MUL.settle_mode() is None
+    assert mf.saturating_add(5.0).settle_mode() is None
+
+
+def test_check_deferrable_and_overlap_enforcement():
+    """Every algebra-invalid defer/overlap combo raises with a clear
+    message; valid combos pass."""
+    for m in (mf.ADD, mf.MIN, mf.BITWISE_OR, mf.COMPLEX_MUL):
+        m.check_deferrable("ctx")  # homomorphic applies may defer
+    with pytest.raises(ValueError, match="sat_add"):
+        mf.saturating_add(5.0).check_deferrable("ctx")
+    with pytest.raises(ValueError, match="drop_add"):
+        mf.dropping_add(0.5).check_deferrable("ctx")
+    for m in (mf.ADD, mf.MIN, mf.BITWISE_OR):
+        m.check_overlap("ctx")  # stale-tolerant merges may overlap
+    for m, pat in ((mf.COMPLEX_MUL, "complex_mul"), (mf.MUL, "mul"),
+                   (mf.saturating_add(5.0), "sat_add")):
+        with pytest.raises(ValueError, match=pat):
+            m.check_overlap("ctx")
+
+
+def test_compile_plan_rejects_defer_for_non_deferrable():
+    from repro.core.merge_plan import MergePlan, compile_plan
+    plan = MergePlan.parse("chip:2,host:2,pod:2:defer")
+    sat = mf.saturating_add(5.0)
+    with pytest.raises(ValueError, match="defer"):
+        compile_plan(plan, 8, merge_fn=sat)
+    compile_plan(plan, 8, merge_fn=mf.ADD)           # deferrable: fine
+    compile_plan(MergePlan.parse("chip:2,host:2,pod:2"), 8,
+                 merge_fn=sat)                       # no :defer: fine
+
+
+def test_solve_defer_schedule_rejects_invalid_merges():
+    from repro.core.defer_schedule import solve_defer_schedule
+    from repro.core.merge_plan import MergePlan
+    plan = MergePlan.parse("chip:2,host:2,pod:2:defer")
+    bytes_lv = [1e6, 1e6, 1e6]
+    names = ("chip", "host", "pod")
+    with pytest.raises(ValueError, match="sat_add"):
+        solve_defer_schedule(plan, bytes_lv, names,
+                             merge_fn=mf.saturating_add(5.0))
+    with pytest.raises(ValueError, match="complex_mul"):
+        solve_defer_schedule(plan, bytes_lv, names, overlap=True,
+                             merge_fn=mf.COMPLEX_MUL)
+    solve_defer_schedule(plan, bytes_lv, names, merge_fn=mf.COMPLEX_MUL)
+    solve_defer_schedule(plan, bytes_lv, names, overlap=True,
+                         merge_fn=mf.ADD)
+
+
 def test_registry_mfrf():
     reg = mf.default_registry()
     assert reg.id_of("add") == 0
