@@ -30,7 +30,7 @@ def main() -> None:
                     help="hierarchy divisor vs Table 2 (1 = full size)")
     ap.add_argument("--only", default="",
                     help="comma list: fig6,fig7,fig8,fig9,table3,lm,hier,"
-                         "fabric,apps_sharded")
+                         "fabric,apps_sharded,kv_gups")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -182,6 +182,27 @@ def main() -> None:
                 # min across mesh sizes: the weakest mesh still has to
                 # show the deferred top-level reduction
                 summary[f"apps_{app}_defer_amortization_x"] = min(ams)
+
+    if want("kv_gups"):
+        from benchmarks.kv_gups import bench_kv_gups
+        rows = bench_kv_gups(quick=args.quick)
+        _emit(rows)
+        cases = {r.get("case"): r for r in rows if "case" in r}
+        bit = next((r for c, r in cases.items()
+                    if str(c).startswith("bitwise")), None)
+        if bit is not None:
+            summary["kv_gups_bitwise"] = bool(bit.get("match"))
+        for dist, key in (("pareto", "kv_gups_speedup_skewed_x"),
+                          ("uniform", "kv_gups_speedup_uniform_x")):
+            sp = next((r for c, r in cases.items()
+                       if str(c).startswith(f"{dist}_speedup")), None)
+            if sp is not None:
+                summary[key] = sp.get("gups_speedup_x")
+        am = next((r for c, r in cases.items()
+                   if str(c).startswith("kv_defer_amortized")), None)
+        if am is not None and am.get("top_level_amortization_x"):
+            summary["kv_defer_amortization_x"] = \
+                am["top_level_amortization_x"]
 
     if want("lm"):
         from benchmarks.lm_tier import (bench_cscatter, bench_grad_accum,

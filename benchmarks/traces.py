@@ -113,11 +113,44 @@ def kv_store(mc: MachineConfig, version: str, llc_frac: float,
                     _emit(s, READ, dup_base + cc * data_lines + dl)
                 _emit(s, WRITE, dl, 2)
         streams.append(s)
-    meta = {"keys": keys, "data_lines": data_lines, "updates": n_updates,
+    # report the EMITTED update count: per-core floor division drops up to
+    # C-1 updates from n_updates, and per-op rates divide by this number
+    meta = {"keys": keys, "data_lines": data_lines,
+            "updates": per_core_updates * C,
             "footprint_lines": {"fgl": data_lines + keys,
                                 "dup": data_lines * (1 + C),
                                 "ccache": data_lines}[version]}
     return _interleave(streams), meta
+
+
+# ---------------------------------------------------------------------------
+# Serving-tier key streams: simulated user populations for the GUPS bench.
+# ---------------------------------------------------------------------------
+
+
+def key_stream(n: int, n_keys: int, dist: str = "uniform",
+               n_users: int = 1 << 20, skew: float = 1.05,
+               seed: int = 0) -> np.ndarray:
+    """``n`` update keys in ``[0, n_keys)`` drawn from a simulated user
+    population (``benchmarks/kv_gups.py``'s request model).
+
+    ``uniform``: every user equally active — the HPCC RandomAccess regime.
+    ``pareto``: user activity is Pareto(``skew``)-distributed (a few users
+    dominate the stream — production traffic), and each user's counter row
+    is spread over the table by a Fibonacci hash so the hot set does NOT
+    collapse onto adjacent rows: skew stresses merge contention, not cache
+    geometry.
+    """
+    rng = np.random.default_rng(seed)
+    if dist == "uniform":
+        users = rng.integers(0, n_users, n, dtype=np.int64)
+    elif dist == "pareto":
+        # rank users by activity: Pareto quantiles over the population
+        ranks = (rng.pareto(skew, n) * n_users / 20).astype(np.int64)
+        users = np.minimum(ranks, n_users - 1)
+    else:
+        raise ValueError(f"dist must be uniform|pareto, got {dist!r}")
+    return ((users * 2654435761) % n_keys).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -301,7 +334,7 @@ def bfs(mc: MachineConfig, version: str, llc_frac: float, seed: int = 0,
 
 APPS = {
     "kv_store": (kv_store, ("fgl", "dup", "ccache")),
-    "kmeans": (kmeans, ("fgl", "dup", "ccache")),
+    "kmeans": (kmeans, ("fgl", "dup", "ccache", "ccache_eager")),
     "pagerank": (pagerank, ("fgl", "dup", "ccache")),
     "bfs": (bfs, ("fgl", "atomic", "dup", "ccache")),
 }

@@ -69,6 +69,9 @@ SUMMARY_KEYS = {
     "fabric_overlap_top_hidden_frac": True,
     "apps_bfs_defer_amortization_x": True,
     "apps_pagerank_defer_amortization_x": True,
+    "kv_gups_speedup_skewed_x": True,
+    "kv_gups_speedup_uniform_x": True,
+    "kv_defer_amortization_x": True,
 }
 
 # (bench, case, metric, benefit?) gated per-record at generation time.
@@ -89,6 +92,9 @@ CASE_METRICS = [
      "top_level_amortization_x", True),
     ("apps_sharded", "pagerank_defer_amortized_s8",
      "top_level_amortization_x", True),
+    # kv_gups: the serving tier's GUPS contest on the forced 8-way mesh.
+    ("kv_gups", "pareto_speedup_s8", "gups_speedup_x", True),
+    ("kv_gups", "kv_defer_amortized_s8", "top_level_amortization_x", True),
 ]
 
 

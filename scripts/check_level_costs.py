@@ -32,6 +32,16 @@ the apps invariants are enforced too:
    wire bytes by at least K/2 vs the all-eager superstep (PageRank's
    deferred commit cycle must actually skip the cross-pod exchange).
 
+When the stream carries ``kv_gups`` records (the serving tier,
+``benchmarks/kv_gups.py``), the serving invariants are enforced too:
+
+8. kv correctness + throughput — the privatized-deferred store matches
+   the fully-synchronized reference bitwise after flush, AND ingests at
+   >= 2x the reference's GUPS on the Pareto-skewed trace;
+9. kv wire — a non-commit tick of the fully deferred plan moves zero
+   collective bytes, and the K-cycle amortized top-level bytes undercut
+   the sync tick's by >= K/2.
+
 A regression in the classifier (hlo_cost), the permutes, the engine's
 stage compilation, or the defer-schedule solver breaks one of these long
 before it breaks correctness tests — this is the cost model's canary.
@@ -156,12 +166,56 @@ def main() -> None:
                     f"defer amortization "
                     f"{[r.get('top_level_amortization_x') for r in amorts]}x")
 
+    kv = [r for r in rows if r.get("bench") == "kv_gups"]
+    kv_msg = ""
+    if kv:
+        errs = [r for r in kv if "error" in r]
+        if errs:
+            fail(f"kv_gups subprocess failed: {errs[0]['error']}")
+        cases = {r.get("case"): r for r in kv if "case" in r}
+
+        def _kv(prefix):
+            return next((r for c, r in cases.items()
+                         if str(c).startswith(prefix)), None)
+
+        bit = _kv("bitwise")
+        if bit is None or not bit.get("match"):
+            fail(f"kv_gups: privatized-deferred store no longer matches "
+                 f"the synchronized reference bitwise after flush "
+                 f"(record {bit}); the speedup is over a *different* "
+                 f"eventual table")
+        sp = _kv("pareto_speedup")
+        if sp is None:
+            fail("kv_gups records present but no pareto_speedup row")
+        sx = sp.get("gups_speedup_x") or 0
+        if sx < 2.0:
+            fail(f"kv_gups: privatized serving only {sx}x sync GUPS on "
+                 f"the Pareto-skewed trace (< 2x); the deferred merge "
+                 f"bill no longer amortizes")
+        step = _kv("kv_defer_step")
+        if step is not None and \
+                any(step.get("wire_bytes_by_level_total", [1])):
+            fail(f"kv_gups: a non-commit tick of the fully deferred plan "
+                 f"moves collective bytes "
+                 f"{step['wire_bytes_by_level_total']}; the hot path is "
+                 f"supposed to run ZERO collectives")
+        am = _kv("kv_defer_amortized")
+        if am is None:
+            fail("kv_gups records present but no kv_defer_amortized row")
+        kk = am.get("commit_every", 0)
+        kx = am.get("top_level_amortization_x") or 0
+        if kx < kk / 2:
+            fail(f"kv_gups: K-cycle top-level bytes amortize only {kx}x "
+                 f"< K/2 = {kk / 2}")
+        kv_msg = (f", kv: bitwise OK, pareto speedup {sx}x, "
+                  f"amortization {kx}x/K={kk}")
+
     print(f"check_level_costs: OK (top-level reduction "
           f"{flat[-1] / hier['hier3_lane']['wire_bytes_by_level_total'][-1]:.0f}x, "
           f"defer amortization {x}x/K={k}, "
           f"auto schedule K={k_auto} -> {x_auto}x, "
           f"overlap hides {hidden:.0%} of the top-level exchange, "
-          f"K {k_ser} -> {k_ovl}{apps_msg})", file=sys.stderr)
+          f"K {k_ser} -> {k_ovl}{apps_msg}{kv_msg})", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -6,10 +6,13 @@
 #    as their own timed stage so latency regressions are visible in the log;
 # 3. benchmark gate — the quick benchmark cells (paper fig6, the
 #    hierarchical-merge wire comparison on a 3-level chip/host/pod
-#    topology, the analytic fabric model, and the sharded-apps
+#    topology, the analytic fabric model, the sharded-apps
 #    mesh-scaling study: BFS/PageRank/k-means as MergePlan programs on a
 #    forced 8-device mesh, BFS gated bitwise and the PageRank deferred
-#    supersteps gated on top-level amortization), checked twice:
+#    supersteps gated on top-level amortization, and the kv_gups serving
+#    study: the sharded commutative KV store gated bitwise-after-flush,
+#    >= 2x sync GUPS on the Pareto trace, zero non-commit collectives,
+#    and >= K/2 top-level amortization), checked twice:
 #      * scripts/check_level_costs.py asserts the cost-model invariants:
 #        per-level bytes monotonically cheaper at lower levels, top level
 #        shrunk by ~the group factor vs the flat butterfly, merge-on-evict
@@ -17,10 +20,11 @@
 #        (hier3_defer_auto, congested-DCI) picking K >= 2 with >= 0.8*K
 #        measured amortization, and the overlapped commit (hier3_overlap)
 #        hiding >= 50% of the top-level exchange time behind compute;
-#      * scripts/check_baseline.py gates the same record stream against
-#        the checked-in benchmarks/baseline.json, so perf regressions in
-#        the gated metrics FAIL CI instead of only printing (regenerate
-#        with --write after an intentional change).
+#      * scripts/check_baseline.py --write-new gates the same record
+#        stream against the checked-in benchmarks/baseline.json, so perf
+#        regressions in the gated metrics FAIL CI instead of only
+#        printing, and seeds bounds for newly-added cells (regenerate
+#        with --write after an intentional perf change).
 #
 # The benchmark stream is tagged JSON records (benchmarks/records.py), so
 # stray log lines cannot poison either gate.
@@ -35,6 +39,7 @@ time PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m slow
 
 echo "=== stage 3: benchmark gate ==="
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --quick --only fig6,hier,fabric,apps_sharded \
+    python -m benchmarks.run --quick \
+    --only fig6,hier,fabric,apps_sharded,kv_gups \
     | python scripts/check_level_costs.py \
-    | python scripts/check_baseline.py benchmarks/baseline.json
+    | python scripts/check_baseline.py --write-new benchmarks/baseline.json

@@ -20,12 +20,15 @@ from repro.core.merge_plan import MergePlan
 
 
 def scatter(table, ids, vals, *, kind: str, use_pallas: bool = False,
-            block_rows: int | None = None, chunk: int | None = None):
+            block_rows: int | None = None, chunk: int | None = None,
+            interpret: bool | None = None):
     """One shard's scatter phase: fold ``vals`` into ``table`` rows by id.
 
     ``use_pallas`` selects the real ``cscatter`` kernel (shard_map paths);
     the default is the vmappable jnp oracle. Out-of-range/negative ids are
-    ignored (the padding convention) in both.
+    ignored (the padding convention) in both. ``interpret`` threads through
+    to the kernel; ``None`` resolves from the backend (compile on TPU,
+    interpret elsewhere).
     """
     if use_pallas:
         from repro.kernels.cscatter import cscatter
@@ -37,7 +40,8 @@ def scatter(table, ids, vals, *, kind: str, use_pallas: bool = False,
             br = r
         if n % ch != 0:
             ch = n
-        return cscatter(table, ids, vals, kind=kind, block_rows=br, chunk=ch)
+        return cscatter(table, ids, vals, kind=kind, block_rows=br, chunk=ch,
+                        interpret=interpret)
     from repro.kernels.ref import ref_cscatter
     return ref_cscatter(table, ids, vals, kind)
 

@@ -28,19 +28,23 @@ def build_mesh(n_devices: int, axis_name: str = "shards"):
 
 
 def mesh_spmd(mesh, axis_name: str = "shards"):
-    """An ``spmd(fn, *args)`` executor over ``mesh`` for shard-major args.
+    """An ``spmd(fn, *args, donate=())`` executor over ``mesh`` for
+    shard-major args.
 
     Matches the vmap executor's contract: every arg and result carries a
     leading shard axis; ``fn`` sees unbatched per-shard values with
-    ``axis_name`` bound for collectives.
+    ``axis_name`` bound for collectives.  ``donate`` names argument
+    positions whose buffers the caller relinquishes (state they rebind
+    from the result, e.g. a store's resident tables) so XLA can update
+    them in place instead of copying every step.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     cache: dict = {}
 
-    def spmd(fn, *args):
-        key = (id(fn), len(args))
+    def spmd(fn, *args, donate=()):
+        key = (id(fn), len(args), tuple(donate))
         if key not in cache:
             def region(*locals_):
                 loc = [jax.tree.map(lambda x: x[0], a) for a in locals_]
@@ -51,7 +55,7 @@ def mesh_spmd(mesh, axis_name: str = "shards"):
                 region, mesh=mesh,
                 in_specs=(P(axis_name),) * len(args),
                 out_specs=P(axis_name), check_rep=False)
-            cache[key] = jax.jit(sharded)
+            cache[key] = jax.jit(sharded, donate_argnums=tuple(donate))
         return cache[key](*args)
 
     return spmd

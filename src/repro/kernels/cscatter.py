@@ -133,9 +133,15 @@ def _kernel(ids_ref, vals_ref, table_ref, out_ref, acc_ref, touched_ref, *,
 def cscatter(table: jax.Array, ids: jax.Array, vals: jax.Array, *,
              kind: str = "add", block_rows: int = 256, chunk: int = 512,
              sat_min: float = 0.0, sat_max: float = 0.0,
-             interpret: bool = True) -> jax.Array:
-    """table [R, D]; ids i32 [N]; vals [N, D] -> updated table [R, D]."""
+             interpret: Optional[bool] = None) -> jax.Array:
+    """table [R, D]; ids i32 [N]; vals [N, D] -> updated table [R, D].
+
+    ``interpret=None`` resolves from the backend: compile on TPU, run the
+    Pallas interpreter elsewhere (CPU/host meshes), matching ``ops.py``.
+    """
     assert kind in MERGE_KINDS, kind
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     r, d = table.shape
     n = ids.shape[0]
     assert vals.shape == (n, d), (vals.shape, n, d)

@@ -1,0 +1,201 @@
+"""Sharded commutative KV serving driver.
+
+    PYTHONPATH=src python -m repro.launch.kv_serve --shards 8 \
+        --keys 65536 --ticks 64 --batch 512 --dist pareto --defer 8
+
+Runs the :mod:`repro.serve` tier on a real device mesh: on a CPU host the
+CLI forces ``--xla_force_host_platform_device_count=<shards>`` before jax
+initializes (accelerator backends ignore the host-platform count), so the
+same command exercises an 8-way shard_map locally and a real pod in
+production.
+
+``--defer`` picks the commit policy:
+
+* ``sync`` — the fully-synchronized reference (merge every tick).
+* an integer ``K`` — fixed commit interval over a fully deferred plan.
+* ``auto`` — walk the compiled sync tick's HLO for the per-level wire
+  vector, hand it to ``solve_defer_schedule`` with the measured tick
+  time, and serve with the solved schedule (printed before the run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--keys", type=int, default=1 << 16,
+                   help="table rows (counter keys)")
+    p.add_argument("--cols", type=int, default=4,
+                   help="columns per key")
+    p.add_argument("--shards", type=int, default=8,
+                   help="mesh width (devices)")
+    p.add_argument("--ticks", type=int, default=64,
+                   help="update batches to ingest")
+    p.add_argument("--batch", type=int, default=512,
+                   help="updates per shard per tick")
+    p.add_argument("--defer", default="8",
+                   help="sync | auto | K (fixed commit interval)")
+    p.add_argument("--consistency", default="eventual",
+                   choices=["eventual", "read_your_writes"])
+    p.add_argument("--engine", default="kernel",
+                   choices=["kernel", "blocked"])
+    p.add_argument("--dist", default="pareto",
+                   choices=["uniform", "pareto"],
+                   help="simulated user key distribution")
+    p.add_argument("--users", type=int, default=1 << 20,
+                   help="simulated user population")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--ways", type=int, default=8,
+                   help="blocked engine: cache ways")
+    return p.parse_args(argv)
+
+
+def _force_host_devices() -> None:
+    """Pin the host platform to --shards devices BEFORE jax initializes,
+    unless the caller already set XLA_FLAGS (same discipline as
+    launch.train: only the CLI entry point touches the environment)."""
+    if "XLA_FLAGS" in os.environ:
+        return
+    n = None
+    for i, a in enumerate(sys.argv):
+        if a == "--shards" and i + 1 < len(sys.argv):
+            n = a = sys.argv[i + 1]
+        elif a.startswith("--shards="):
+            n = a.split("=", 1)[1]
+    try:
+        n = int(n) if n is not None else 8
+    except ValueError:
+        return  # malformed: let argparse raise the clear error
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n}")
+
+
+if __name__ == "__main__":
+    _force_host_devices()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def main(argv=None) -> None:
+    args = _parse_args(argv)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.apps.sharded import build_mesh, mesh_spmd
+    from repro.core.defer_schedule import solve_defer_schedule
+    from repro.launch import hlo_cost
+    from repro.serve import KVConfig, ShardedKV, serving_plan
+
+    S, R, D, B = args.shards, args.keys, args.cols, args.batch
+    axis = "shards"
+    mesh = build_mesh(S, axis)
+    spmd = mesh_spmd(mesh, axis)
+    use_pallas = jax.default_backend() == "tpu"
+
+    cfg = KVConfig(n_keys=R, cols=D, dtype=jnp.int32,
+                   consistency=args.consistency, engine=args.engine,
+                   ways=args.ways, use_pallas=use_pallas)
+    sync_mode = args.defer == "sync"
+    plan = serving_plan(S, "none" if sync_mode else "all")
+
+    schedule = commit_every = None
+    if args.defer == "auto":
+        # Walk the sync tick's compiled HLO for the wire vector, measure
+        # one deferred non-commit tick, and solve the schedule.
+        probe = ShardedKV(cfg, S, spmd, plan=serving_plan(S, "none"))
+        sizes = tuple(lv.size for lv in plan.levels)
+        names = tuple(lv.name for lv in plan.levels)
+        group = 1
+        for sz in sizes[:-1]:
+            group *= sz
+
+        def region(tbl, keys, vals):
+            loc = [jax.tree.map(lambda x: x[0], a)
+                   for a in (tbl, keys, vals)]
+            out = probe.raw_tick_fn()(*loc)
+            return jax.tree.map(lambda x: x[None], out)
+
+        f = jax.jit(shard_map(region, mesh=mesh,
+                              in_specs=(P(axis),) * 3,
+                              out_specs=P(axis), check_rep=False))
+        hlo = f.lower(jax.ShapeDtypeStruct((S, R, D), jnp.int32),
+                      jax.ShapeDtypeStruct((S, B), jnp.int32),
+                      jax.ShapeDtypeStruct((S, B, D), jnp.int32)
+                      ).compile().as_text()
+        walk = hlo_cost.analyze_hlo(hlo, intra_group_size=group,
+                                    level_sizes=sizes, level_names=names)
+        k0 = np.zeros((S, B), np.int32)
+        v0 = np.ones((S, B, D), np.int32)
+        timer = ShardedKV(cfg, S, spmd, plan=plan,
+                          commit_every=1 << 20)  # never commits in probe
+        timer.tick(k0, v0)  # compile
+        t0 = time.perf_counter()
+        for _ in range(4):
+            timer.tick(k0, v0)
+        jax.block_until_ready(timer.settled)
+        tick_s = (time.perf_counter() - t0) / 4
+        schedule = solve_defer_schedule(
+            plan, walk["wire_bytes_by_level_total"], names,
+            compute_s=tick_s, merge_fn=cfg.merge)
+        print("solved schedule:")
+        print(schedule.describe())
+    elif not sync_mode:
+        try:
+            commit_every = int(args.defer)
+        except ValueError:
+            raise SystemExit(f"--defer must be sync|auto|K, "
+                             f"got {args.defer!r}")
+
+    kv = ShardedKV(cfg, S, spmd, plan=plan, schedule=schedule,
+                   commit_every=commit_every)
+
+    try:
+        # repo-root import (python -m from the checkout puts cwd on path)
+        from benchmarks.traces import key_stream
+    except ImportError:
+        def key_stream(n, n_keys, dist, n_users, seed):
+            rng = np.random.default_rng(seed)
+            if dist == "uniform":
+                users = rng.integers(0, n_users, n)
+            else:
+                ranks = (rng.pareto(1.05, n) * n_users / 20).astype(np.int64)
+                users = np.minimum(ranks, n_users - 1)
+            return ((users * 2654435761) % n_keys).astype(np.int32)
+    keys = key_stream(args.ticks * S * B, R, args.dist,
+                      n_users=args.users, seed=args.seed
+                      ).reshape(args.ticks, S, B)
+    vals = np.ones((args.ticks, S, B, D), np.int32)
+
+    kv.tick(keys[0], vals[0])  # compile
+    jax.block_until_ready(kv.settled)
+    t0 = time.perf_counter()
+    for t in range(1, args.ticks):
+        kv.tick(keys[t], vals[t])
+    jax.block_until_ready(kv.settled)
+    wall = time.perf_counter() - t0
+    ups = S * B * (args.ticks - 1) / wall
+
+    kv.flush()
+    tbl = kv.table()
+    total = int(tbl[:, 0].astype(np.int64).sum())
+    print(f"{args.dist} stream: {args.ticks} ticks x {S} shards x {B} "
+          f"updates, defer={args.defer}, engine={args.engine}")
+    print(f"ingest: {wall:.3f}s  ({ups:,.0f} updates/s, "
+          f"{ups / 1e9:.6f} GUPS)")
+    print(f"settled mass col0: {total} "
+          f"(= {S * B * args.ticks} updates ingested)")
+    for k, v in kv.counters().items():
+        if k != "schedule":
+            print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -57,7 +57,9 @@ def main() -> None:
                 cfg.param_dtype)
 
         prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
-        decode = jax.jit(model.decode_step)
+        # donate the KV caches: decode_step(params, tok, caches, pos)
+        # updates them in place instead of reallocating every token
+        decode = jax.jit(model.decode_step, donate_argnums=(2,))
 
         t0 = time.time()
         logits, caches = prefill(params, batch)

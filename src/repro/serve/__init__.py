@@ -1,0 +1,11 @@
+"""The serving tier: a sharded commutative KV store under request traffic.
+
+``serve.kv`` is the first inference-shaped client of the merge engine —
+keys sharded over a mesh axis, privatized per-device deltas, deferred
+cross-device reconciliation through the MergePlan cascade.  ``serve.
+frontend`` batches a request stream into the fixed-shape ticks the store
+compiles once.
+"""
+
+from repro.serve.kv import KVConfig, ShardedKV, serving_plan  # noqa: F401
+from repro.serve.frontend import BatchedFrontend  # noqa: F401

@@ -1,0 +1,479 @@
+"""A sharded commutative KV store: the paper's headline app as a serving tier.
+
+The table lives replicated per device (every shard can answer any read from
+its *settled* copy); the **update stream** is what shards over the mesh axis
+— each device privatizes the updates it receives and cross-device agreement
+is an explicit, batched merge through the MergePlan engine.  This is the
+CXL-style partial-coherence structure: hot updates live in non-coherent
+private state, coherence is a scheduled event, not a per-access protocol.
+
+Two privatization engines, same algebra:
+
+* ``engine="kernel"`` — the production hot path.  A tick's updates scatter
+  into a merge-identity table (``apps.common.scatter``: the Pallas
+  ``cscatter`` kernel on real meshes, the jnp oracle under ``vmap``).  The
+  kernel's VMEM accumulator *is* the privatized copy — merged once per
+  block on grid exit with touched-mask dirty-merge skip.
+* ``engine="blocked"`` — the faithful instrumented model.  A resident
+  ``core.blocked.BlockedCache`` (W ways, LRU, merge-on-evict, dirty-merge
+  skip) carries privatized blocks **across ticks**; only evicted mass
+  enters the merge cascade each tick, and ``flush`` drains the rest at
+  commits.  Fig. 9-style counters come out of ``counters()``.
+
+Cross-device reconciliation is ``ccache.defer_cascade`` over a (by default
+fully) deferred plan: non-commit ticks run **zero collectives**, commit
+ticks settle the pending cascade per the :class:`DeferSchedule` (solve one
+with ``solve_defer_schedule`` from the measured wire vector — see
+``benchmarks/kv_gups.py``).  The store is eventually-merged by default;
+``consistency="read_your_writes"`` routes reads through the device's own
+unmerged state (pendings + resident cache, ``c_read_row`` semantics) on
+top of the last settled table, still with zero read-path collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocked, ccache
+from repro.core.defer_schedule import DeferSchedule
+from repro.core.merge_functions import ADD, MergeFn
+from repro.core.merge_plan import MergeLevel, MergePlan
+from repro.apps.common import default_plan, scatter
+
+Array = jax.Array
+
+_CONSISTENCY = ("eventual", "read_your_writes")
+_ENGINES = ("kernel", "blocked")
+# merge kinds the scatter phase (Pallas kernel / jnp oracle) understands,
+# keyed by the MergeFn's fused-collective op.
+_KERNEL_KINDS = {"add": "add", "max": "max", "min": "min", "or": "or"}
+
+DEFAULT_COMMIT_EVERY = 8
+
+
+def serving_plan(n_shards: int, defer: str = "all",
+                 lane_parallel: bool = True) -> MergePlan:
+    """The serving tier's merge plan: ``default_plan`` geometry, with the
+    commit policy as a knob.
+
+    ``defer="all"`` (the serving default) marks *every* level ``:defer`` —
+    a non-commit tick runs no collectives at all, the whole hierarchy
+    settles on schedule.  ``"top"`` defers only the outermost level
+    (training's shape: cheap links eager, the expensive one amortized).
+    ``"none"`` is the fully-synchronized reference — every level
+    exchanges every tick (the lock-array strawman's coherence bill).
+    """
+    if defer not in ("all", "top", "none"):
+        raise ValueError(f"defer must be all|top|none, got {defer!r}")
+    base = default_plan(n_shards, lane_parallel=lane_parallel)
+    exec_ix = [i for i, lv in enumerate(base.levels) if lv.size > 1]
+    if defer == "none" or not exec_ix:
+        return base
+    # defer is a suffix property of the plan: mark from the first (or
+    # last, for "top") exchanging level upward, riding over any size-1
+    # levels above it (they exchange nothing either way).
+    start = exec_ix[0] if defer == "all" else exec_ix[-1]
+    levels = tuple(
+        dataclasses.replace(lv, defer=True) if i >= start else lv
+        for i, lv in enumerate(base.levels))
+    return dataclasses.replace(base, levels=levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVConfig:
+    """Shape/policy of one :class:`ShardedKV` table."""
+
+    n_keys: int
+    cols: int = 1
+    dtype: Any = jnp.int32
+    merge: MergeFn = ADD
+    consistency: str = "eventual"
+    engine: str = "kernel"
+    # blocked engine: the paper's W-way source buffer geometry.
+    ways: int = 8
+    block_rows: int = 8
+    # kernel engine: scatter-phase kernel selection (Pallas needs a real
+    # mesh; the vmap executor must keep the jnp oracle).
+    use_pallas: bool = False
+    pallas_block_rows: Optional[int] = None
+    pallas_chunk: Optional[int] = None
+
+    def __post_init__(self):
+        if self.consistency not in _CONSISTENCY:
+            raise ValueError(f"consistency must be one of {_CONSISTENCY}, "
+                             f"got {self.consistency!r}")
+        if self.engine not in _ENGINES:
+            raise ValueError(f"engine must be one of {_ENGINES}, "
+                             f"got {self.engine!r}")
+        if self.engine == "kernel" and \
+                self.merge.xla_reduce not in _KERNEL_KINDS:
+            raise ValueError(
+                f"engine='kernel' scatters through the cscatter kernel, "
+                f"which has no kind for merge {self.merge.name!r} "
+                f"(xla_reduce={self.merge.xla_reduce!r}); use "
+                f"engine='blocked' for flexible-path merges")
+        if self.engine == "blocked" and self.n_keys % self.block_rows != 0:
+            raise ValueError(
+                f"blocked engine: n_keys={self.n_keys} must be a multiple "
+                f"of block_rows={self.block_rows}")
+
+
+class ShardedKV:
+    """The store.  Host-side driver around per-shard compiled tick/read fns.
+
+    ``spmd(fn, *args)`` is the executor contract shared with the apps:
+    every arg/result carries a leading shard axis, ``fn`` sees unbatched
+    per-shard values with ``axis_name`` bound (``apps.sharded.mesh_spmd``
+    on a real mesh, ``jax.vmap(..., axis_name=...)`` in tests).  All step
+    closures are created once here — both executors memoize by function
+    identity, so each (engine, due) program compiles exactly once.
+    """
+
+    def __init__(self, config: KVConfig, n_shards: int,
+                 spmd: Callable, *, axis_name: str = "shards",
+                 plan: Optional[MergePlan] = None,
+                 schedule: Optional[DeferSchedule] = None,
+                 commit_every: Optional[int] = None):
+        if n_shards < 2:
+            raise ValueError("ShardedKV needs n_shards >= 2 (a single shard "
+                             "has nothing to reconcile)")
+        self.config = config
+        self.n_shards = n_shards
+        self.spmd = spmd
+        # state args (settled/pendings/cache) are rebound from each tick's
+        # result, so their buffers can be donated for in-place updates —
+        # but only executors that take the keyword support it (mesh_spmd
+        # does; the tests' plain vmap lambda does not).
+        try:
+            self._can_donate = "donate" in inspect.signature(spmd).parameters
+        except (TypeError, ValueError):
+            self._can_donate = False
+        self.axis_name = axis_name
+        self.plan = plan if plan is not None else serving_plan(n_shards)
+        merge = config.merge
+
+        from repro.core.merge_plan import compile_plan
+        all_stages = compile_plan(self.plan, n_shards, merge_fn=merge)
+        stages = [s for s in all_stages if s.defer]
+        self._deferred_names = tuple(s.name for s in stages)
+        self.n_deferred = len(stages)
+        self.synchronized = self.n_deferred == 0
+        # fully deferred (no eager stages): a non-commit tick has no
+        # exchange at all, so updates coalesce straight into the resident
+        # pending — the merge-on-evict hot path, one table pass per tick
+        self._fully_deferred = len(all_stages) == self.n_deferred > 0
+        if self.synchronized:
+            if schedule is not None or commit_every is not None:
+                raise ValueError("plan has no deferred levels; a commit "
+                                 "schedule is meaningless — drop it or use "
+                                 "a :defer plan")
+        else:
+            if schedule is None:
+                schedule = DeferSchedule.fixed(
+                    commit_every or DEFAULT_COMMIT_EVERY,
+                    self._deferred_names)
+            elif commit_every is not None:
+                raise ValueError("pass schedule= or commit_every=, not both")
+            if tuple(schedule.level_names) != self._deferred_names:
+                raise ValueError(
+                    f"schedule levels {schedule.level_names} do not match "
+                    f"the plan's deferred stages {self._deferred_names}")
+        self.schedule = schedule
+        if config.engine == "blocked" and not self.synchronized:
+            eager = [lv.name for lv in self.plan.levels
+                     if lv.size > 1 and not lv.defer]
+            if eager:
+                raise ValueError(
+                    f"engine='blocked' needs a fully deferred plan: eager "
+                    f"levels {eager} would settle per tick while the "
+                    f"resident cache withholds unmerged mass from them; "
+                    f"use serving_plan(n, 'all') or engine='kernel'")
+
+        # -- device state (leading shard axis) ------------------------------
+        S, R, D = n_shards, config.n_keys, config.cols
+        ident_row = merge.identity((R, D), config.dtype)
+        self.settled = jnp.broadcast_to(ident_row, (S, R, D))
+        self.pendings = tuple(
+            jnp.broadcast_to(ident_row, (S, R, D))
+            for _ in range(self.n_deferred))
+        self.cache = None
+        if config.engine == "blocked":
+            c0 = blocked.init_cache(config.ways, config.block_rows, D,
+                                    config.dtype)
+            self.cache = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (S,) + x.shape), c0)
+        self._t = 0
+
+        # -- compiled-once per-shard programs -------------------------------
+        self._tick_fns: dict[Any, Callable] = {}
+        if self.synchronized:
+            self._tick_fns["sync"] = self._make_sync_tick()
+        else:
+            for due in range(self.n_deferred + 1):
+                self._tick_fns[due] = self._make_deferred_tick(due)
+            self._flush_fn = self._make_flush()
+        self._read_fn = self._make_read()
+
+    # ------------------------------------------------------------------
+    # per-shard program builders (closures created once, see class doc)
+    # ------------------------------------------------------------------
+
+    def _identity_table(self) -> Array:
+        cfg = self.config
+        return cfg.merge.identity((cfg.n_keys, cfg.cols), cfg.dtype)
+
+    def _scatter_into(self, table: Array, keys: Array, vals: Array) -> Array:
+        """One shard's scatter phase: fold this tick's updates into
+        ``table`` (the merge-identity table for a fresh delta, or the
+        resident pending itself on the fully-deferred hot path — for the
+        kernel kinds ``apply == combine``, so ``scatter(pending, ...)``
+        equals ``combine(pending, scatter(identity, ...))``)."""
+        cfg = self.config
+        kind = _KERNEL_KINDS[cfg.merge.xla_reduce]
+        if kind == "add" and not cfg.use_pallas:
+            # one-pass fused scatter-add: no identity table, no touched
+            # mask — the oracle's passes cost full table sweeps
+            ok = (keys >= 0) & (keys < cfg.n_keys)
+            safe = jnp.where(ok, keys, 0).astype(jnp.int32)
+            return table.at[safe].add(
+                jnp.where(ok[:, None], vals, jnp.zeros_like(vals)))
+        return scatter(table, keys, vals, kind=kind,
+                       use_pallas=cfg.use_pallas,
+                       block_rows=cfg.pallas_block_rows,
+                       chunk=cfg.pallas_chunk)
+
+    def _scatter_delta(self, keys: Array, vals: Array) -> Array:
+        """This tick's updates as a privatized delta table."""
+        return self._scatter_into(self._identity_table(), keys, vals)
+
+    def _blocked_delta(self, cache, keys: Array, vals: Array):
+        """Run the tick's updates through the resident BlockedCache; the
+        returned table holds only the mass *evicted* this tick."""
+        cfg = self.config
+        ok = (keys >= 0) & (keys < cfg.n_keys)
+        ident_val = cfg.merge.identity((cfg.cols,), cfg.dtype)
+        # padding: invalid keys become identity updates on row 0 — a
+        # combine no-op (the scan model has no skip lane).
+        safe = jnp.where(ok, keys, 0).astype(jnp.int32)
+        vals = jnp.where(ok[:, None], vals, ident_val)
+        return blocked.cop_scatter(cache, self._identity_table(), safe,
+                                   vals, cfg.merge)
+
+    def _make_sync_tick(self):
+        merge, axis, plan = self.config.merge, self.axis_name, self.plan
+
+        def sync_tick(settled, keys, vals):
+            delta = self._scatter_delta(keys, vals)
+            full = ccache.hierarchical_merge(delta, axis, merge, plan)
+            return merge.apply(settled, full)
+
+        return sync_tick
+
+    def _make_deferred_tick(self, due: int):
+        merge, axis, plan = self.config.merge, self.axis_name, self.plan
+        full = due == self.n_deferred
+
+        if self.config.engine == "kernel" and self._fully_deferred:
+            def tick(settled, pendings, keys, vals):
+                # hot path: coalesce straight into the resident pending
+                p0 = self._scatter_into(pendings[0], keys, vals)
+                if due == 0:
+                    return settled, (p0,) + tuple(pendings[1:])
+                new_p, agg = ccache.defer_cascade(
+                    self._identity_table(), [p0] + list(pendings[1:]),
+                    due, axis, merge, plan)
+                if full:
+                    settled = merge.apply(settled, agg)
+                return settled, tuple(new_p)
+        elif self.config.engine == "kernel":
+            def tick(settled, pendings, keys, vals):
+                delta = self._scatter_delta(keys, vals)
+                new_p, agg = ccache.defer_cascade(delta, list(pendings),
+                                                  due, axis, merge, plan)
+                if full:
+                    settled = merge.apply(settled, agg)
+                return settled, tuple(new_p)
+        else:
+            def tick(settled, pendings, cache, keys, vals):
+                cache, delta = self._blocked_delta(cache, keys, vals)
+                if due > 0:
+                    # commit tick: the resident (unevicted) mass must
+                    # enter the cascade too — the explicit merge instr.
+                    cache, delta = blocked.flush(cache, delta, merge)
+                new_p, agg = ccache.defer_cascade(delta, list(pendings),
+                                                  due, axis, merge, plan)
+                if full:
+                    settled = merge.apply(settled, agg)
+                return settled, tuple(new_p), cache
+
+        return tick
+
+    def _make_flush(self):
+        merge, axis, plan = self.config.merge, self.axis_name, self.plan
+        due = self.n_deferred
+
+        if self.config.engine == "kernel":
+            def flush_fn(settled, pendings):
+                new_p, agg = ccache.defer_cascade(
+                    self._identity_table(), list(pendings), due, axis,
+                    merge, plan)
+                return merge.apply(settled, agg), tuple(new_p)
+        else:
+            def flush_fn(settled, pendings, cache):
+                cache, delta = blocked.flush(cache, self._identity_table(),
+                                             merge)
+                new_p, agg = ccache.defer_cascade(delta, list(pendings),
+                                                  due, axis, merge, plan)
+                return merge.apply(settled, agg), tuple(new_p), cache
+
+        return flush_fn
+
+    def _make_read(self):
+        cfg = self.config
+        merge = cfg.merge
+        ryw = cfg.consistency == "read_your_writes" and not self.synchronized
+
+        def gather(table, keys):
+            ok = (keys >= 0) & (keys < cfg.n_keys)
+            safe = jnp.where(ok, keys, 0)
+            rows = table[safe]
+            ident = merge.identity((cfg.cols,), cfg.dtype)
+            return jnp.where(ok[:, None], rows, ident)
+
+        if not ryw:
+            def read(settled, keys):
+                return gather(settled, keys)
+            return read
+
+        if cfg.engine == "kernel":
+            def read(settled, pendings, keys):
+                view = settled
+                for p in pendings:
+                    view = merge.apply(view, p)
+                return gather(view, keys)
+            return read
+
+        def read(settled, pendings, cache, keys):
+            view = settled
+            for p in pendings:
+                view = merge.apply(view, p)
+            base = gather(view, keys)
+            # c_read_row semantics, vectorized: a resident way's unmerged
+            # contribution delta(src, upd) overlays the settled+pending
+            # view.  (upd alone would double-count the tick-local src
+            # copy the cascade already carries.)
+            ok = (keys >= 0) & (keys < cfg.n_keys)
+            safe = jnp.where(ok, keys, 0)
+            block = safe // cfg.block_rows
+            line = safe % cfg.block_rows
+            hits = cache.block_ids[None, :] == block[:, None]  # [B, W]
+            hit = jnp.any(hits, axis=-1) & ok
+            way = jnp.argmax(hits, axis=-1)
+            res = merge.delta(cache.src_vals[way, line],
+                              cache.upd_vals[way, line])      # [B, D]
+            ident = merge.identity(res.shape, res.dtype)
+            return merge.apply(base, jnp.where(hit[:, None], res, ident))
+
+        return read
+
+    # ------------------------------------------------------------------
+    # host-side driver API
+    # ------------------------------------------------------------------
+
+    def _run(self, fn, *args, donate=()):
+        if donate and self._can_donate:
+            return self.spmd(fn, *args, donate=donate)
+        return self.spmd(fn, *args)
+
+    def tick(self, keys, vals) -> None:
+        """Ingest one fixed-shape batch of updates: ``keys`` [S, B] int32
+        (< 0 = padding), ``vals`` [S, B, cols].  Commit policy rides the
+        schedule; non-commit ticks of a fully deferred plan run zero
+        collectives."""
+        keys = jnp.asarray(keys, jnp.int32)
+        vals = jnp.asarray(vals, self.config.dtype)
+        if self.synchronized:
+            self.settled = self._run(self._tick_fns["sync"], self.settled,
+                                     keys, vals, donate=(0,))
+            self._t += 1
+            return
+        self._t += 1
+        due = self.schedule.due_count(self._t)
+        fn = self._tick_fns[due]
+        if self.config.engine == "kernel":
+            self.settled, self.pendings = self._run(
+                fn, self.settled, self.pendings, keys, vals, donate=(0, 1))
+        else:
+            self.settled, self.pendings, self.cache = self._run(
+                fn, self.settled, self.pendings, self.cache, keys, vals,
+                donate=(0, 1, 2))
+
+    def read(self, keys) -> Array:
+        """Serve one fixed-shape batch of gets: ``keys`` [S, B] -> [S, B,
+        cols].  Zero collectives either way: ``eventual`` reads the last
+        settled table; ``read_your_writes`` overlays the device's own
+        unmerged pendings (+ resident cache delta, blocked engine)."""
+        keys = jnp.asarray(keys, jnp.int32)
+        if self.synchronized or self.config.consistency == "eventual":
+            return self.spmd(self._read_fn, self.settled, keys)
+        if self.config.engine == "kernel":
+            return self.spmd(self._read_fn, self.settled, self.pendings,
+                             keys)
+        return self.spmd(self._read_fn, self.settled, self.pendings,
+                         self.cache, keys)
+
+    def flush(self) -> None:
+        """Commit everything outstanding (pendings + resident cache).
+
+        After a flush the settled table equals the fully-synchronized
+        reference over the same update stream — bitwise, for integer ADD.
+        Resets the schedule phase (a flush ends the current cycle)."""
+        if self.synchronized:
+            return
+        if self.config.engine == "kernel":
+            self.settled, self.pendings = self._run(
+                self._flush_fn, self.settled, self.pendings, donate=(0, 1))
+        else:
+            self.settled, self.pendings, self.cache = self._run(
+                self._flush_fn, self.settled, self.pendings, self.cache,
+                donate=(0, 1, 2))
+        self._t = 0
+
+    def table(self) -> np.ndarray:
+        """The settled table (any shard's copy — it is replicated)."""
+        return np.asarray(self.settled[0])
+
+    def counters(self) -> dict:
+        out = {"ticks": self._t, "engine": self.config.engine,
+               "consistency": self.config.consistency,
+               "synchronized": self.synchronized}
+        if not self.synchronized:
+            out["schedule"] = self.schedule.as_dict()
+        if self.cache is not None:
+            for k, leaf in (("evict_merges", self.cache.n_evict_merges),
+                            ("silent_evicts", self.cache.n_silent_evicts),
+                            ("flush_merges", self.cache.n_flush_merges)):
+                out[k] = int(np.asarray(leaf).sum())
+            out["total_merges"] = out["evict_merges"] + out["flush_merges"]
+        return out
+
+    # ------------------------------------------------------------------
+    # introspection for benchmarks (HLO wire-vector walks)
+    # ------------------------------------------------------------------
+
+    def raw_tick_fn(self, due: Optional[int] = None) -> Callable:
+        """The per-shard tick program, for lowering under ``shard_map``
+        (``hlo_cost`` wire-vector walks).  ``due=None`` on a synchronized
+        store returns the sync tick."""
+        if self.synchronized:
+            return self._tick_fns["sync"]
+        if due is None:
+            raise ValueError("deferred store: pass due (0..n_deferred)")
+        return self._tick_fns[due]

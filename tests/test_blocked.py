@@ -47,6 +47,37 @@ def test_c_read_row_sees_private_copy():
     assert float(blocked.c_read_row(cache, table, jnp.asarray(3))[0]) == 1.0
 
 
+def test_c_read_row_miss_and_post_flush():
+    """Miss path: a row with no resident block reads straight from the
+    memory table.  After ``flush`` the residency is drained, so the same
+    read comes from the (now merged) table — and stays correct when the
+    way is refilled by a different block."""
+    table = jnp.asarray(np.arange(16, dtype=np.float32).reshape(8, 2))
+    cache = blocked.init_cache(ways=2, block_rows=2, cols=2,
+                               dtype=table.dtype)
+    # miss everywhere: reads == memory rows
+    for r in (0, 5, 7):
+        np.testing.assert_array_equal(
+            np.asarray(blocked.c_read_row(cache, table, jnp.asarray(r))),
+            np.asarray(table[r]))
+
+    cache, table = blocked.cop_scatter(
+        cache, table, jnp.asarray([3]), jnp.full((1, 2), 10.0), ADD)
+    # row 3 hits its private copy; row 5 (different block) still misses
+    assert float(blocked.c_read_row(cache, table, jnp.asarray(3))[0]) == 16.0
+    assert float(blocked.c_read_row(cache, table, jnp.asarray(5))[0]) == 10.0
+
+    cache, table = blocked.flush(cache, table, ADD)
+    # drained: the merged table now carries the update, reads agree
+    assert float(table[3, 0]) == 16.0
+    assert float(blocked.c_read_row(cache, table, jnp.asarray(3))[0]) == 16.0
+    # refill the ways with other blocks: row 3 must read memory, not a
+    # stale resident copy
+    cache, table = blocked.cop_scatter(
+        cache, table, jnp.asarray([0, 6]), jnp.ones((2, 2)), ADD)
+    assert float(blocked.c_read_row(cache, table, jnp.asarray(3))[0]) == 16.0
+
+
 def test_eviction_counters_fig9_shape():
     """More ways -> fewer evict-merges (merge-on-evict locality)."""
     table = jnp.zeros((64, 2))

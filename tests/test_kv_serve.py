@@ -1,0 +1,319 @@
+"""The sharded commutative KV serving tier: store semantics, consistency
+knob, frontend ordering — and the forced-8-device GUPS configuration.
+
+Fast tests drive :class:`repro.serve.ShardedKV` under the vmap executor
+(jnp scatter oracle, same per-shard programs as the mesh).  The property
+test pins the paper's correctness contract at serving granularity: after
+``flush()`` the privatized-deferred store equals the fully-synchronized
+reference AND a numpy serialization oracle **bitwise** (integer ADD),
+whatever the commit schedule did in between.  The slow test at the bottom
+reruns the store on a real forced-8-device ``shard_map`` mesh — the
+``benchmarks/kv_gups.py`` configuration.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback (tests/_hypothesis_stub.py)
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core.defer_schedule import DeferSchedule
+from repro.core.merge_functions import MAX
+from repro.serve import BatchedFrontend, KVConfig, ShardedKV, serving_plan
+
+ENV = dict(os.environ, PYTHONPATH=os.pathsep.join(
+    [os.path.abspath("src"), os.environ.get("PYTHONPATH", "")]))
+ENV.pop("XLA_FLAGS", None)
+
+AXIS = "shards"
+
+
+def _spmd(fn, *args):
+    return jax.vmap(fn, axis_name=AXIS)(*args)
+
+
+def _stream(seed, ticks, S, B, R, D):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, R, (ticks, S, B)).astype(np.int32)
+    keys[:, :, -1] = -1  # every tick carries padding
+    vals = rng.integers(1, 9, (ticks, S, B, D)).astype(np.int32)
+    return keys, vals
+
+
+def _oracle(keys, vals, R, D):
+    ref = np.zeros((R, D), np.int64)
+    for t in range(keys.shape[0]):
+        m = keys[t] >= 0
+        np.add.at(ref, keys[t][m], vals[t][m])
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# the correctness contract: flush() == sync reference == oracle, bitwise
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1),
+       engine=st.sampled_from(["kernel", "blocked"]),
+       commit_every=st.sampled_from([1, 3, 8]))
+@settings(max_examples=8, deadline=None)
+def test_property_flush_equals_sync_reference_bitwise(seed, engine,
+                                                      commit_every):
+    """Whatever the commit schedule withheld, ``flush()`` lands the store
+    on the fully-synchronized reference's table bitwise (integer ADD is
+    exact) — the speedup never buys a different eventual state."""
+    S, R, D, B, T = 4, 32, 2, 8, 7  # T deliberately not a cycle multiple
+    keys, vals = _stream(seed, T, S, B, R, D)
+
+    cfg = KVConfig(n_keys=R, cols=D, engine=engine)
+    priv = ShardedKV(cfg, S, _spmd, commit_every=commit_every)
+    sync = ShardedKV(cfg if engine == "kernel"
+                     else KVConfig(n_keys=R, cols=D),
+                     S, _spmd, plan=serving_plan(S, "none"))
+    for t in range(T):
+        priv.tick(keys[t], vals[t])
+        sync.tick(keys[t], vals[t])
+    priv.flush()
+    want = _oracle(keys, vals, R, D)
+    assert np.array_equal(sync.table().astype(np.int64), want)
+    assert np.array_equal(priv.table().astype(np.int64), want)
+
+
+def test_partially_deferred_plan_settles_eager_levels_per_tick():
+    S, R, D, B, T = 8, 64, 2, 16, 6
+    keys, vals = _stream(3, T, S, B, R, D)
+    kv = ShardedKV(KVConfig(n_keys=R, cols=D), S, _spmd,
+                   plan=serving_plan(S, "top"), commit_every=3)
+    assert kv.n_deferred == 1 and not kv.synchronized
+    for t in range(T):
+        kv.tick(keys[t], vals[t])
+    kv.flush()
+    assert np.array_equal(kv.table().astype(np.int64),
+                          _oracle(keys, vals, R, D))
+
+
+def test_max_merge_and_nontrivial_schedule():
+    """Idempotent MAX through the kernel engine, on an explicit nested
+    DeferSchedule rather than the fixed default."""
+    S, R, D, B, T = 4, 16, 1, 8, 8
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, R, (T, S, B)).astype(np.int32)
+    vals = rng.integers(-50, 50, (T, S, B, D)).astype(np.int32)
+
+    plan = serving_plan(4)
+    names = tuple(s.name for s in
+                  [lv for lv in plan.levels if lv.size > 1])
+    sched = DeferSchedule(intervals=(2, 4), level_names=names)
+    kv = ShardedKV(KVConfig(n_keys=R, cols=D, merge=MAX), S, _spmd,
+                   plan=plan, schedule=sched)
+    for t in range(T):
+        kv.tick(keys[t], vals[t])
+    kv.flush()
+    want = np.full((R, D), np.iinfo(np.int32).min, np.int64)
+    for t in range(T):
+        np.maximum.at(want, keys[t].reshape(-1), vals[t].reshape(-1, D))
+    assert np.array_equal(kv.table().astype(np.int64), want)
+
+
+# ---------------------------------------------------------------------------
+# the consistency knob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["kernel", "blocked"])
+def test_read_your_writes_sees_own_unmerged_state(engine):
+    """Before any commit, an RYW read on the writing shard returns the
+    buffered update; an eventual read still returns the settled (empty)
+    table; other shards see nothing either way (zero read collectives)."""
+    S, R, D = 4, 16, 2
+    for consistency in ("eventual", "read_your_writes"):
+        kv = ShardedKV(KVConfig(n_keys=R, cols=D, engine=engine,
+                                consistency=consistency),
+                       S, _spmd, commit_every=8)
+        keys = np.full((S, 4), -1, np.int32)
+        vals = np.zeros((S, 4, D), np.int32)
+        keys[2, 0] = 5
+        vals[2, 0] = 7
+        kv.tick(keys, vals)
+
+        got = np.asarray(kv.read(np.full((S, 1), 5, np.int32)))
+        if consistency == "read_your_writes":
+            assert got[2, 0].tolist() == [7, 7]  # own write visible
+        else:
+            assert got[2, 0].tolist() == [0, 0]  # eventual: not yet
+        for s in (0, 1, 3):
+            assert got[s, 0].tolist() == [0, 0]  # never cross-shard
+
+        kv.flush()
+        got = np.asarray(kv.read(np.full((S, 1), 5, np.int32)))
+        assert all(got[s, 0].tolist() == [7, 7] for s in range(S))
+
+
+def test_read_your_writes_blocked_overlays_resident_cache():
+    """The blocked engine's RYW read must include mass still resident in
+    the BlockedCache (never evicted, never flushed) — c_read_row
+    semantics on top of settled + pendings."""
+    S, R, D = 2, 16, 1
+    kv = ShardedKV(KVConfig(n_keys=R, cols=D, engine="blocked",
+                            ways=4, block_rows=4,
+                            consistency="read_your_writes"),
+                   S, _spmd, commit_every=8)
+    keys = np.asarray([[3, 3], [-1, -1]], np.int32)
+    vals = np.ones((S, 2, D), np.int32)
+    kv.tick(keys, vals)
+    assert kv.counters()["evict_merges"] == 0  # still resident
+    got = np.asarray(kv.read(np.asarray([[3], [3]], np.int32)))
+    assert got[0, 0, 0] == 2  # both adds visible on the writing shard
+    assert got[1, 0, 0] == 0
+    # invalid keys read the merge identity
+    got = np.asarray(kv.read(np.asarray([[-1], [99]], np.int32)))
+    assert got[0, 0, 0] == 0 and got[1, 0, 0] == 0
+
+
+# ---------------------------------------------------------------------------
+# the batched front end
+# ---------------------------------------------------------------------------
+
+def _frontend(consistency="read_your_writes", slots=4, S=4, R=64):
+    kv = ShardedKV(KVConfig(n_keys=R, cols=1, consistency=consistency),
+                   S, _spmd, commit_every=4)
+    return BatchedFrontend(kv, slots_per_shard=slots)
+
+
+def test_frontend_get_never_overtakes_earlier_add():
+    """More adds than one tick's slots: a get queued after them must not
+    be served until every earlier add to its shard has landed."""
+    fe = _frontend(slots=4, S=4)
+    key = 5  # shard 1
+    for _ in range(10):           # 3 ticks worth of adds at 4 slots
+        fe.add(key, 1)
+    rid = fe.get(key)
+    served = {}
+    steps = 0
+    while rid not in served:
+        served.update(fe.step())
+        steps += 1
+    assert steps == 3             # 4 + 4 + (2 adds then the get)
+    assert int(served[rid][0]) == 10
+
+
+def test_frontend_interleaved_program_order():
+    fe = _frontend(slots=8)
+    r0 = fe.get(7)
+    fe.add(7, 5)
+    r1 = fe.get(7)
+    fe.add(7, 1)
+    r2 = fe.get(7)
+    out = fe.drain()
+    assert int(out[r0][0]) == 0
+    assert int(out[r1][0]) == 5
+    assert int(out[r2][0]) == 6
+    assert fe.backlog == 0
+
+
+def test_frontend_routes_by_key_and_validates():
+    fe = _frontend()
+    with pytest.raises(KeyError):
+        fe.add(64, 1)
+    with pytest.raises(KeyError):
+        fe.get(-1)
+    # all traffic for one key funnels through key % n_shards
+    fe.add(6, 2)
+    assert len(fe._q[6 % 4]) == 1 and fe.backlog == 1
+
+
+# ---------------------------------------------------------------------------
+# construction validation
+# ---------------------------------------------------------------------------
+
+def test_config_and_store_validation():
+    with pytest.raises(ValueError, match="consistency"):
+        KVConfig(n_keys=8, consistency="strong")
+    with pytest.raises(ValueError, match="engine"):
+        KVConfig(n_keys=8, engine="gpu")
+    with pytest.raises(ValueError, match="multiple"):
+        KVConfig(n_keys=9, engine="blocked", block_rows=4)
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardedKV(KVConfig(n_keys=8), 1, _spmd)
+    # sync plan: a commit schedule is meaningless
+    with pytest.raises(ValueError, match="deferred"):
+        ShardedKV(KVConfig(n_keys=8), 4, _spmd,
+                  plan=serving_plan(4, "none"), commit_every=4)
+    # blocked engine cannot ride a partially eager plan
+    with pytest.raises(ValueError, match="fully deferred"):
+        ShardedKV(KVConfig(n_keys=8, engine="blocked", block_rows=8),
+                  8, _spmd, plan=serving_plan(8, "top"))
+    # schedule levels must match the plan's deferred stages
+    with pytest.raises(ValueError, match="schedule"):
+        ShardedKV(KVConfig(n_keys=8), 4, _spmd,
+                  schedule=DeferSchedule(intervals=(2,),
+                                         level_names=("pod",)))
+    with pytest.raises(ValueError, match="not both"):
+        ShardedKV(KVConfig(n_keys=8), 4, _spmd,
+                  schedule=DeferSchedule.fixed(2, ("chip", "pod")),
+                  commit_every=2)
+
+
+def test_serving_plan_defer_knob():
+    for defer, n_def in (("all", 3), ("top", 1), ("none", 0)):
+        p = serving_plan(8, defer)
+        assert sum(lv.defer for lv in p.levels) == n_def
+    with pytest.raises(ValueError, match="defer"):
+        serving_plan(8, "some")
+
+
+# ---------------------------------------------------------------------------
+# acceptance configuration: real forced-8-device mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_kv_store_on_forced_8_device_mesh():
+    """The benchmarks/kv_gups.py configuration, shrunk: the deferred
+    store on a real 8-device shard_map mesh (donated state buffers)
+    matches the sync store and the numpy oracle bitwise after flush."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.apps.sharded import build_mesh, mesh_spmd
+        from repro.serve import KVConfig, ShardedKV, serving_plan
+
+        S, R, D, B, T = 8, 4096, 4, 128, 11
+        mesh = build_mesh(S, "shards")
+        spmd = mesh_spmd(mesh, "shards")
+        cfg = KVConfig(n_keys=R, cols=D, dtype=jnp.int32)
+        sync = ShardedKV(cfg, S, spmd, plan=serving_plan(S, "none"))
+        priv = ShardedKV(cfg, S, spmd, commit_every=8)
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, R, (T, S, B)).astype(np.int32)
+        vals = rng.integers(1, 5, (T, S, B, D)).astype(np.int32)
+        ref = np.zeros((R, D), np.int64)
+        for t in range(T):
+            np.add.at(ref, keys[t].reshape(-1), vals[t].reshape(-1, D))
+            sync.tick(keys[t], vals[t])
+            priv.tick(keys[t], vals[t])
+        priv.flush()
+        out = {
+            "sync_matches_oracle": bool(np.array_equal(
+                sync.table().astype(np.int64), ref)),
+            "priv_matches_sync": bool(np.array_equal(
+                priv.table(), sync.table())),
+        }
+        print("RESULT " + json.dumps(out))
+    """)
+    r = subprocess.run([sys.executable, "-c", script], env=ENV,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = next(ln for ln in r.stdout.splitlines()
+                if ln.startswith("RESULT "))
+    out = json.loads(line[len("RESULT "):])
+    assert out == {"sync_matches_oracle": True, "priv_matches_sync": True}
