@@ -41,3 +41,50 @@ def iter_records(lines: Iterable[str]) -> Iterator[dict]:
         rec = parse_record(line)
         if rec is not None:
             yield rec
+
+
+def record_key(rec: dict) -> Optional[tuple]:
+    """The identity downstream consumers look a case record up by
+    (``check_baseline.find`` takes the FIRST match; anything keyed the
+    same is silently dead weight). ``None`` for summary/unkeyed records."""
+    if "summary" in rec:
+        return None
+    bench, case = rec.get("bench"), rec.get("case")
+    if bench is None and case is None:
+        return None
+    return (bench, case)
+
+
+def duplicate_record_keys(records: Iterable[dict]) -> list[str]:
+    """Silent last/first-write-wins collisions in one record stream.
+
+    Two case records sharing a (bench, case) key, or a summary key emitted
+    by more than one summary record, mean a consumer picks one value and
+    drops the other without a trace — a renamed case or a double-emitting
+    runner can un-gate a metric this way. Returns one line per collision,
+    quoting BOTH values, for the caller to fail loudly with.
+    """
+    problems: list[str] = []
+    first_case: dict = {}
+    first_summary: dict = {}
+    for rec in records:
+        if "summary" in rec and isinstance(rec["summary"], dict):
+            for k, v in rec["summary"].items():
+                if k in first_summary:
+                    problems.append(
+                        f"summary key {k!r} emitted by two summary records: "
+                        f"first={first_summary[k]!r} then={v!r}")
+                else:
+                    first_summary[k] = v
+            continue
+        key = record_key(rec)
+        if key is None:
+            continue
+        if key in first_case:
+            problems.append(
+                f"duplicate record key bench={key[0]!r} case={key[1]!r}: "
+                f"kept={json.dumps(first_case[key], sort_keys=True)} "
+                f"shadowed={json.dumps(rec, sort_keys=True)}")
+        else:
+            first_case[key] = rec
+    return problems

@@ -45,7 +45,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.records import parse_record  # noqa: E402
+from benchmarks.records import duplicate_record_keys, parse_record  # noqa: E402
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..",
                                 "benchmarks", "baseline.json")
@@ -118,15 +118,23 @@ def lookup(rec: dict, metric: str):
 def collect(stream) -> tuple[dict, list[dict]]:
     summary = {}
     rows = []
+    records = []
     for line in stream:
         print(line, end="")  # pass the stream through for the log
         rec = parse_record(line)
         if rec is None:
             continue
+        records.append(rec)
         if "summary" in rec:
             summary = rec["summary"]
         else:
             rows.append(rec)
+    # A duplicated key would make find()/the summary dict silently pick one
+    # value and gate against it — fail loudly with both values instead
+    # (diagnostic CC030 in the static-analysis catalog).
+    dups = duplicate_record_keys(records)
+    if dups:
+        fail("CC030 duplicate record keys: " + "; ".join(dups))
     return summary, rows
 
 

@@ -51,8 +51,10 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.records import parse_record  # noqa: E402
+from repro.analysis.placement import check_noncommit_record  # noqa: E402
 
 
 def fail(msg: str) -> None:
@@ -193,12 +195,15 @@ def main() -> None:
                  f"the Pareto-skewed trace (< 2x); the deferred merge "
                  f"bill no longer amortizes")
         step = _kv("kv_defer_step")
-        if step is not None and \
-                any(step.get("wire_bytes_by_level_total", [1])):
-            fail(f"kv_gups: a non-commit tick of the fully deferred plan "
-                 f"moves collective bytes "
-                 f"{step['wire_bytes_by_level_total']}; the hot path is "
-                 f"supposed to run ZERO collectives")
+        if step is None:
+            fail("kv_gups records present but no kv_defer_step row; the "
+                 "non-commit wire walk did not run")
+        # Shared with the static verifier (repro.analysis) so the canary
+        # and `scripts/lint_plans.py` cannot drift apart on what "zero
+        # non-commit collectives" means.
+        diag = check_noncommit_record(step, site=f"kv_gups:{step.get('case')}")
+        if diag is not None:
+            fail(f"kv_gups: {diag.format()}")
         am = _kv("kv_defer_amortized")
         if am is None:
             fail("kv_gups records present but no kv_defer_amortized row")

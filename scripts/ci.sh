@@ -1,10 +1,19 @@
 #!/usr/bin/env bash
-# Tier-1 gate, three stages:
+# Tier-1 gate, four stages:
 #
 # 1. fast tests — the offline suite minus the slow-marked subprocess tests;
 # 2. slow tests — the subprocess CLI / multi-device end-to-end tests, run
 #    as their own timed stage so latency regressions are visible in the log;
-# 3. benchmark gate — the quick benchmark cells (paper fig6, the
+# 3. static lint — scripts/lint_plans.py (docs/static_analysis.md): the
+#    seeded-violation canaries first (every known-bad input must trip its
+#    stable CC code), then the full sweep — merge-fn trait certification,
+#    plan audits for every config on the production mesh geometries, the
+#    app supersteps traced collective-free, and the ShardedKV serving
+#    plans lowered on a forced 8-way host mesh with their compiled
+#    collectives checked against the ccache manifests and their donated
+#    buffers checked as aliased. Failures print the CC code plus the
+#    offending plan/level, before any benchmark money is spent;
+# 4. benchmark gate — the quick benchmark cells (paper fig6, the
 #    hierarchical-merge wire comparison on a 3-level chip/host/pod
 #    topology, the analytic fabric model, the sharded-apps
 #    mesh-scaling study: BFS/PageRank/k-means as MergePlan programs on a
@@ -37,7 +46,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow"
 echo "=== stage 2: slow tests (timed) ==="
 time PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m slow
 
-echo "=== stage 3: benchmark gate ==="
+echo "=== stage 3: static plan lint ==="
+python scripts/lint_plans.py --fixtures
+python scripts/lint_plans.py
+
+echo "=== stage 4: benchmark gate ==="
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --quick \
     --only fig6,hier,fabric,apps_sharded,kv_gups \

@@ -1,0 +1,25 @@
+#!/usr/bin/env python
+"""Static MergePlan lint sweep — thin wrapper over ``python -m
+repro.analysis`` so CI and humans share one entry point.
+
+Sweeps every config in src/repro/configs/, every app superstep in
+src/repro/apps/, every shipped merge fn, and the ShardedKV serving plans
+on a forced 8-way host mesh; fails with stable CC diagnostic codes
+(docs/static_analysis.md). Typical CI invocation::
+
+    python scripts/lint_plans.py --json lint_report.json
+
+Suppress a finding per site with ``--suppress CC021@kv[all]``; run the
+seeded-violation canaries with ``--fixtures``.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Static commutativity & collective-placement verifier for MergePlan
+programs (docs/static_analysis.md).
+
+Layer 1 lints jaxprs: merge-fn trait certification (randomized algebraic
+probes + primitive classification) and privatization checks (collectives
+or settled/pending taint escaping a non-commit region). Layer 2 lints
+compiled HLO via the ``launch/hlo_cost.py`` walker: zero collectives on
+non-commit ticks, commit collectives matching the ``ccache`` manifest,
+and donated buffers actually aliased.
+
+Run the full sweep with ``python -m repro.analysis`` (or
+``scripts/lint_plans.py``); ``--fixtures`` runs the seeded-violation
+canaries.
+"""
+
+from repro.analysis.diagnostics import CATALOG, Diagnostic, Report
+from repro.analysis.jaxpr import (audit_plan, audit_stages,
+                                  check_kv_tick_taint,
+                                  check_noncommit_region)
+from repro.analysis.placement import (check_commit_walk, check_donation,
+                                      check_noncommit_record,
+                                      check_noncommit_walk)
+from repro.analysis.traits import certify_merge_fn
+
+__all__ = [
+    "CATALOG", "Diagnostic", "Report",
+    "certify_merge_fn",
+    "audit_plan", "audit_stages",
+    "check_noncommit_region", "check_kv_tick_taint",
+    "check_noncommit_record", "check_noncommit_walk",
+    "check_commit_walk", "check_donation",
+]

@@ -1,0 +1,208 @@
+"""HLO-level placement lint: compiled programs vs the scheduled manifest.
+
+Layer 2 of the verifier reuses the ``launch/hlo_cost.py`` walker: lower and
+compile a program under ``shard_map``, run :func:`analyze_hlo
+<repro.launch.hlo_cost.analyze_hlo>` with the plan's ``level_sizes``, and
+check the resulting per-level collective accounting against what
+``ccache.collective_manifest`` scheduled:
+
+* :func:`check_noncommit_walk` — CC020: a non-commit tick (fully deferred
+  ``ShardedKV`` hot path, a deferred train step between commits) must move
+  ZERO cross-device collective bytes. :func:`check_noncommit_record` is the
+  same check over a benchmark wire record — ``scripts/check_level_costs.py``
+  and the linter share it so the CI canary cannot drift from the analyzer.
+* :func:`check_commit_walk` — CC021: a commit program's collectives must
+  match the manifest — no bytes above the topmost scheduled level, every
+  scheduled exchange actually moves bytes on its own level, only the
+  scheduled collective kinds appear (an all-gather the plan never asked
+  for is an XLA-introduced exchange), and the collective-permute /
+  fused-op counts equal the scheduled rounds.
+* :func:`check_donation` — CC022: every donated input buffer must appear
+  in the module's ``input_output_alias`` map; a donated buffer compiled to
+  a copy is the silent regression class the kv_gups GUPS win is exposed to.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Iterable, Optional, Sequence
+
+from repro.analysis.diagnostics import Diagnostic
+
+# input_output_alias={ {0}: (0, {}, may-alias), {1,0}: (2, {0}, must-alias) }
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{[0-9, ]*\}:\s*\((\d+)\s*,\s*\{[0-9, ]*\}\s*(?:,\s*[a-z\-]+)?\)")
+
+
+def _nonzero_levels(walk: dict) -> list[tuple[int, float]]:
+    totals = walk.get("wire_bytes_by_level_total") or []
+    return [(i, b) for i, b in enumerate(totals) if b > 0]
+
+
+def _level_name(walk: dict, i: int) -> str:
+    names = walk.get("level_names") or []
+    return names[i] if i < len(names) else f"level{i}"
+
+
+def check_noncommit_record(rec: dict, site: str) -> Optional[Diagnostic]:
+    """CC020 over a wire record (an ``analyze_hlo`` dict or a benchmark
+    record carrying its fields): any collective byte or op disqualifies a
+    non-commit tick. Returns ``None`` when clean."""
+    hot = _nonzero_levels(rec)
+    per = rec.get("per_collective") or {}
+    ops = {k: v.get("count", 0) for k, v in per.items()
+           if isinstance(v, dict) and v.get("count", 0) > 0}
+    # benchmark records flatten the per-kind counts into "collectives"
+    counts = rec.get("collectives")
+    if isinstance(counts, dict):
+        ops.update({k: v for k, v in counts.items() if v})
+    if not hot and not ops:
+        return None
+    detail = []
+    if hot:
+        detail.append("bytes " + ", ".join(
+            f"{_level_name(rec, i)}={b:.0f}" for i, b in hot))
+    if ops:
+        detail.append(f"ops {ops}")
+    return Diagnostic(
+        code="CC020", site=site,
+        level=_level_name(rec, hot[0][0]) if hot else None,
+        message=f"non-commit tick moves collective traffic "
+                f"({'; '.join(detail)}); the privatized hot path must run "
+                f"ZERO collectives")
+
+
+def check_noncommit_walk(walk: dict, site: str) -> list[Diagnostic]:
+    d = check_noncommit_record(walk, site)
+    return [d] if d else []
+
+
+def check_commit_walk(walk: dict, manifest: Sequence, site: str,
+                      n_leaves: int = 1,
+                      exact_counts: bool = True) -> list[Diagnostic]:
+    """CC021: the walk's collective multiset vs the scheduled ``manifest``
+    (a ``ccache.program_manifest`` stage list). ``n_leaves`` is the number
+    of payload arrays riding each exchange; ``exact_counts=False`` relaxes
+    the round-count equality to >= (compressed wire formats carry extra
+    leaves per round)."""
+    if not manifest:
+        return check_noncommit_walk(walk, site)
+    diags: list[Diagnostic] = []
+    totals = walk.get("wire_bytes_by_level_total") or []
+    per = walk.get("per_collective") or {}
+
+    top = max(m.index for m in manifest)
+    for i, b in _nonzero_levels(walk):
+        if i > top:
+            diags.append(Diagnostic(
+                code="CC021", site=site, level=_level_name(walk, i),
+                message=f"{b:.0f} collective bytes on level "
+                        f"{_level_name(walk, i)} above the topmost "
+                        f"scheduled level {manifest[-1].name!r}; the "
+                        f"commit reached links the plan never scheduled"))
+    for m in manifest:
+        if m.fanout > 1 and m.index < len(totals) and totals[m.index] <= 0:
+            diags.append(Diagnostic(
+                code="CC021", site=site, level=m.name,
+                message=f"scheduled stage {m.name!r} ({m.kind}, fanout "
+                        f"{m.fanout}) moved no bytes on its own level; "
+                        f"the exchange was elided or misplaced"))
+
+    allowed = {"collective-permute"}
+    if any(m.fused_ops for m in manifest):
+        allowed.add("all-reduce")
+    if any(m.kind == "gather" for m in manifest):
+        allowed.add("all-gather")
+    observed = {k for k, v in per.items()
+                if isinstance(v, dict) and v.get("count", 0) > 0}
+    for kind in sorted(observed - allowed):
+        diags.append(Diagnostic(
+            code="CC021", site=site,
+            message=f"compiled program emits {kind} "
+                    f"(count {per[kind].get('count')}), which no scheduled "
+                    f"stage produces; XLA introduced an exchange the plan "
+                    f"did not ask for"))
+
+    want_permutes = sum(m.permute_rounds for m in manifest) * n_leaves
+    got_permutes = (per.get("collective-permute") or {}).get("count", 0)
+    bad = (got_permutes != want_permutes if exact_counts
+           else got_permutes < want_permutes)
+    if bad:
+        diags.append(Diagnostic(
+            code="CC021", site=site,
+            message=f"collective-permute count {got_permutes:.0f} != "
+                    f"scheduled {want_permutes} ("
+                    + " + ".join(f"{m.name}:{m.permute_rounds}"
+                                 for m in manifest)
+                    + f" rounds x {n_leaves} leaves)"))
+    want_fused = sum(m.fused_ops for m in manifest) * n_leaves
+    got_fused = (per.get("all-reduce") or {}).get("count", 0)
+    if exact_counts and got_fused != want_fused:
+        diags.append(Diagnostic(
+            code="CC021", site=site,
+            message=f"fused all-reduce count {got_fused:.0f} != scheduled "
+                    f"{want_fused}"))
+    return diags
+
+
+# -- donation / aliasing -----------------------------------------------------
+
+
+def aliased_param_numbers(hlo_text: str) -> set[int]:
+    """Flat parameter numbers the module's ``input_output_alias`` map
+    aliases into outputs (empty when the module header has no map)."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return set()
+    # brace-match the whole map: entries nest braces, and custom-calls
+    # carry look-alike output_to_operand_aliasing attrs we must not scan
+    i = hlo_text.index("{", start)
+    depth, end = 0, i
+    for j in range(i, len(hlo_text)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                end = j
+                break
+    return {int(p) for p in _ALIAS_ENTRY_RE.findall(hlo_text[i:end + 1])}
+
+
+def donated_param_numbers(args: Sequence, donate_argnums: Iterable[int]
+                          ) -> set[int]:
+    """Flat parameter numbers a ``jax.jit(donate_argnums=...)`` donation
+    covers, given the call's (abstract) positional args."""
+    import jax  # deferred: the record-stream checks must stay jax-free
+
+    donate = set(donate_argnums)
+    out: set[int] = set()
+    flat_ix = 0
+    for i, a in enumerate(args):
+        n = len(jax.tree.leaves(a))
+        if i in donate:
+            out.update(range(flat_ix, flat_ix + n))
+        flat_ix += n
+    return out
+
+
+def check_donation(hlo_text: str, expected_params: set[int], site: str,
+                   require: bool = True) -> list[Diagnostic]:
+    """CC022: every expected-donated flat param must be aliased.
+
+    ``require=False`` downgrades an *entirely missing* alias map to a
+    warning — backends without donation support (CPU in some jaxlib
+    builds) strip the whole map, which is a platform limitation, not the
+    per-buffer fallback regression this check hunts.
+    """
+    aliased = aliased_param_numbers(hlo_text)
+    missing = sorted(expected_params - aliased)
+    if not missing:
+        return []
+    severity = "error" if (require or aliased) else "warning"
+    return [Diagnostic(
+        code="CC022", site=site, severity=severity,
+        message=f"donated parameter(s) {missing} are not in the module's "
+                f"input_output_alias map (aliased: {sorted(aliased)}); "
+                f"the donated buffers compiled to copies — the in-place "
+                f"update win silently regressed")]

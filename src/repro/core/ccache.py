@@ -597,6 +597,128 @@ def commit_deferred(pending: "PendingUpdate", mem: PyTree, axis_name,
     return commit_land(u, mem, merge_fn, key=key)
 
 
+@dataclasses.dataclass(frozen=True)
+class StageManifest:
+    """What one compiled stage is *scheduled* to put on the wire.
+
+    Derived host-side from the same round formulas the stage executors run
+    (``_stage_innermost`` / ``_stage_rep`` / ``_stage_lane``), so an HLO
+    walk of the compiled program can be checked against it: any collective
+    the manifest does not schedule is XLA-introduced (CC021).
+
+    ``exchange_rounds`` are ``ppermute`` rounds at the stage's own plan
+    level (level-``index`` links); ``intra_rounds`` are the stage's
+    sub-level rounds (rep-stage unit broadcast, lane-stage unit
+    all-gather) riding links strictly below ``index``. ``fused_ops`` is 1
+    when the stage rides the fused XLA collective (one all-reduce per
+    leaf, zero ppermutes).
+    """
+
+    index: int          # plan level index the stage executes
+    name: str
+    defer: bool
+    stride: int
+    fanout: int
+    kind: str           # "fused" | "butterfly" | "ring"
+    fused_ops: int
+    exchange_rounds: int
+    intra_rounds: int
+
+    @property
+    def permute_rounds(self) -> int:
+        return self.exchange_rounds + self.intra_rounds
+
+
+def _cross_unit_rounds(fanout: int) -> tuple[str, int]:
+    if permutes.is_pow2(fanout):
+        return "butterfly", fanout.bit_length() - 1
+    return "ring", fanout - 1
+
+
+def collective_manifest(topology: Topology, axis_size: int,
+                        merge_fn: Optional[MergeFn] = None,
+                        compress: bool = False,
+                        force_tree: bool = False) -> list[StageManifest]:
+    """The per-level collective schedule of ``topology`` on ``axis_size``.
+
+    One :class:`StageManifest` per compiled stage, in execution order. A
+    program that runs the stage subset S (e.g. a commit tick's
+    eager+due-prefix) is scheduled to emit, per payload leaf, exactly
+    ``sum(m.fused_ops for m in S)`` fused collectives and
+    ``sum(m.permute_rounds for m in S)`` collective-permutes — the
+    multiset the HLO placement linter asserts against.
+    """
+    if not isinstance(topology, MergePlan):
+        if topology.group_size <= 1 or axis_size == 1:
+            # flat dispatch (reduce_update): fused when available,
+            # butterfly/ring otherwise
+            if axis_size == 1:
+                return []
+            fused = (not force_tree and not compress and merge_fn is not None
+                     and merge_fn.xla_reduce in _XLA_REDUCERS)
+            if fused:
+                kind, fused_ops, rounds = "fused", 1, 0
+            elif permutes.is_pow2(axis_size):
+                kind, fused_ops = "butterfly", 0
+                rounds = axis_size.bit_length() - 1
+            else:
+                # tree_merge's non-pow2 fallback is all_gather + local
+                # fold; it emits one all-gather and no ppermutes.
+                kind, fused_ops, rounds = "gather", 0, 0
+            return [StageManifest(index=0, name="flat", defer=False,
+                                  stride=1, fanout=axis_size, kind=kind,
+                                  fused_ops=fused_ops,
+                                  exchange_rounds=rounds, intra_rounds=0)]
+        topology = topology.to_plan(axis_size, compress=compress)
+    plan = topology
+    stages = compile_plan(plan, axis_size, merge_fn=merge_fn)
+    out: list[StageManifest] = []
+    for st in stages:
+        use_compress = (st.compress and merge_fn is not None
+                        and merge_fn.encode is not None)
+        if st.stride == 1:
+            fused = (st.combine_mode == "xla" and not force_tree
+                     and not use_compress and merge_fn is not None
+                     and merge_fn.xla_reduce in _XLA_REDUCERS)
+            if fused:
+                kind, fused_ops, rounds = "fused", 1, 0
+            else:
+                kind, rounds = _cross_unit_rounds(st.fanout)
+                fused_ops = 0
+            intra = 0
+        else:
+            kind, rounds = _cross_unit_rounds(st.fanout)
+            fused_ops = 0
+            if st.lane_parallel:
+                # _lane_all_gather: doubling (pow2 stride) or ring
+                intra = (st.stride.bit_length() - 1
+                         if permutes.is_pow2(st.stride) else st.stride - 1)
+            else:
+                # _broadcast_within_units: binomial swap tree
+                intra = max(0, (st.stride - 1).bit_length())
+        out.append(StageManifest(
+            index=st.index, name=st.name, defer=st.defer, stride=st.stride,
+            fanout=st.fanout, kind=kind, fused_ops=fused_ops,
+            exchange_rounds=rounds, intra_rounds=intra))
+    return out
+
+
+def program_manifest(topology: Topology, axis_size: int, due: int,
+                     merge_fn: Optional[MergeFn] = None,
+                     compress: bool = False,
+                     force_tree: bool = False) -> list[StageManifest]:
+    """Manifest of the stages a ``defer_cascade(due=...)`` tick executes:
+    every eager stage plus the leading ``due`` deferred stages."""
+    manifest = collective_manifest(topology, axis_size, merge_fn=merge_fn,
+                                   compress=compress, force_tree=force_tree)
+    eager = [m for m in manifest if not m.defer]
+    deferred = [m for m in manifest if m.defer]
+    if not 0 <= due <= len(deferred):
+        raise ValueError(f"program_manifest: due={due} out of range "
+                         f"[0, {len(deferred)}]")
+    return eager + deferred[:due]
+
+
 def deferred_stages_of(topology: Topology, axis_size: int,
                        merge_fn: Optional[MergeFn] = None) -> list:
     """The compiled deferred stages of ``topology`` on an ``axis_size`` axis

@@ -393,9 +393,23 @@ class MergeFunctionRegistry:
     def __len__(self) -> int:
         return len(self._by_id)
 
+    def __iter__(self):
+        """Registered merges in id order (the verifier sweeps these)."""
+        return iter(self._by_id)
+
 
 def default_registry() -> MergeFunctionRegistry:
     reg = MergeFunctionRegistry()
     for fn in (ADD, MAX, MIN, BITWISE_OR, MUL, COMPLEX_MUL):
         reg.merge_init(fn)
     return reg
+
+
+def standard_merges() -> tuple[MergeFn, ...]:
+    """Every merge the repo ships, including the parameterized families at
+    representative parameters — the trait-certification sweep surface."""
+    return tuple(default_registry()) + (
+        saturating_add(8.0, min_value=-8.0),
+        dropping_add(0.25),
+        int8_compressed_add(),
+    )

@@ -234,6 +234,43 @@ class LevelStage:
     transport: str
 
 
+def validate_plan_merge(plan: MergePlan, axis_size: int,
+                        merge_fn=None) -> list[tuple]:
+    """Collect ``compile_plan``'s validity problems without raising.
+
+    Returns ``(kind, level_name, message)`` tuples, ``kind`` one of
+    ``"geometry"`` (plan does not cover the axis), ``"codec"`` (a compress
+    level with no wire codec), or ``"defer-trait"`` (a ``:defer`` level
+    reached by a non-deferrable merge). ``compile_plan`` raises on the
+    first problem; the static analyzer (``repro.analysis``) reports all of
+    them as CC013/CC014 diagnostics.
+    """
+    problems: list[tuple] = []
+    try:
+        plan.validate(axis_size)
+    except ValueError as e:
+        problems.append(("geometry", None, str(e)))
+    if merge_fn is not None and (merge_fn.encode is None
+                                 or merge_fn.decode is None):
+        bad = [lv.name for lv in plan.levels if lv.compress and lv.size > 1]
+        if bad:
+            problems.append((
+                "codec", bad[0],
+                f"levels {bad} set compress but merge {merge_fn.name!r} "
+                f"defines no encode/decode wire format — the exchange would "
+                f"silently stay uncompressed; use a codec merge (e.g. "
+                f"int8_compressed_add) or drop the compress flags"))
+    if merge_fn is not None:
+        deferred = [lv.name for lv in plan.levels if lv.defer and lv.size > 1]
+        if deferred:
+            try:
+                merge_fn.check_deferrable(
+                    f"compile_plan: levels {deferred} set :defer")
+            except ValueError as e:
+                problems.append(("defer-trait", deferred[0], str(e)))
+    return problems
+
+
 def compile_plan(plan: MergePlan, axis_size: int,
                  merge_fn=None) -> list[LevelStage]:
     """Validate ``plan`` against the axis and emit its stage sequence.
@@ -251,23 +288,12 @@ def compile_plan(plan: MergePlan, axis_size: int,
     checked against the merge's algebra traits: a non-deferrable merge
     (apply observes memory or randomizes per commit — saturating/dropping
     adds) raises here, at plan-compile time, instead of silently committing
-    K coalesced steps with different semantics.
+    K coalesced steps with different semantics. The same checks are
+    available non-raising as :func:`validate_plan_merge`.
     """
-    plan.validate(axis_size)
-    if merge_fn is not None and (merge_fn.encode is None
-                                 or merge_fn.decode is None):
-        bad = [lv.name for lv in plan.levels if lv.compress and lv.size > 1]
-        if bad:
-            raise ValueError(
-                f"levels {bad} set compress but merge {merge_fn.name!r} "
-                f"defines no encode/decode wire format — the exchange would "
-                f"silently stay uncompressed; use a codec merge (e.g. "
-                f"int8_compressed_add) or drop the compress flags")
-    if merge_fn is not None:
-        deferred = [lv.name for lv in plan.levels if lv.defer and lv.size > 1]
-        if deferred:
-            merge_fn.check_deferrable(
-                f"compile_plan: levels {deferred} set :defer")
+    problems = validate_plan_merge(plan, axis_size, merge_fn)
+    if problems:
+        raise ValueError(problems[0][2])
     stages: list[LevelStage] = []
     strides = plan.strides()
     for i, lv in enumerate(plan.levels):

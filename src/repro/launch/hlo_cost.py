@@ -564,7 +564,17 @@ def analyze_hlo(text: str, intra_group_size: Optional[int] = None,
     comps, entry = parse_module(text)
     m = _NUM_PARTITIONS_RE.search(text)
     num_partitions = int(m.group(1)) if m else 1
-    if level_sizes and num_partitions > 1:
+    if level_sizes and level_names and len(level_names) != len(level_sizes):
+        raise ValueError(
+            f"level_names {tuple(level_names)} has {len(level_names)} "
+            f"entries for {len(level_sizes)} level_sizes "
+            f"{tuple(level_sizes)}; per-level bytes would be reported "
+            f"under the wrong names")
+    # Validate whenever the module header declares its partition count
+    # (including ==1): a mismatched hierarchy would silently misattribute
+    # every collective byte. Header-less fixture HLO is exempt — there is
+    # nothing to validate against.
+    if level_sizes and m is not None:
         covered = 1
         for s in level_sizes:
             covered *= s

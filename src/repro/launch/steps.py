@@ -263,7 +263,8 @@ class DeferredTrainStep:
     """
 
     def __init__(self, variants, schedule: DeferSchedule, init_fn, dp: int,
-                 deferred_names: tuple, land_variants=None, flush_fn=None):
+                 deferred_names: tuple, land_variants=None, flush_fn=None,
+                 topology=None, merge_fn=None, merge_compress: bool = False):
         self.variants = variants
         self.land_variants = land_variants
         self.schedule = schedule
@@ -271,10 +272,26 @@ class DeferredTrainStep:
         self._flush_fn = flush_fn
         self.dp = dp
         self.deferred_names = deferred_names
+        self.topology = topology
+        self.merge_fn = merge_fn
+        self.merge_compress = merge_compress
 
     @property
     def overlap(self) -> bool:
         return self.schedule.overlap
+
+    def scheduled_manifest(self, due: Optional[int] = None) -> list:
+        """The collective schedule ``variants[due]`` is licensed to emit
+        (``ccache.program_manifest``: eager stages + the leading ``due``
+        deferred stages); ``due=None`` = the full-commit variant. The
+        static verifier walks each variant's HLO against this."""
+        if self.topology is None:
+            raise ValueError("step was built without its merge topology")
+        if due is None:
+            due = len(self.deferred_names)
+        return ccache.program_manifest(self.topology, self.dp, due,
+                                       merge_fn=self.merge_fn,
+                                       compress=self.merge_compress)
 
     def init_defer_state(self, params) -> dict:
         """Zeroed pendings (merge identity) + step counter (+ in-flight
@@ -514,7 +531,9 @@ def _make_deferred_train_step(grads_of, optimizer, mesh: Mesh, plan,
     land_variants = ([make_variant(due, land=True)
                       for due in range(n_def + 1)] if overlap else None)
     return DeferredTrainStep(variants, schedule, init_defer_state, dp, names,
-                             land_variants=land_variants, flush_fn=flush)
+                             land_variants=land_variants, flush_fn=flush,
+                             topology=plan, merge_fn=grad_merge_fn,
+                             merge_compress=merge_compress)
 
 
 class LoweredPlan:
@@ -537,10 +556,26 @@ class LoweredPlan:
         self.defer_step = defer_step
 
     def lower(self, mesh: Mesh):
-        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+        return self.lower_variant(mesh, self.fn)
+
+    def lower_variant(self, mesh: Mesh, fn):
+        """Lower a specific step variant (e.g. ``defer_step.variants[due]``)
+        against this plan's specs/shardings — all variants share the state
+        and metrics structure, only the commit depth differs."""
+        jitted = jax.jit(fn, in_shardings=self.in_shardings,
                          out_shardings=self.out_shardings)
         with mesh, sharding_rules(mesh, self.rules):
             return jitted.lower(*self.in_specs)
+
+    @property
+    def noncommit_fn(self):
+        """The zero-commit (due=0) step — what a deferred plan runs between
+        commits; ``None`` for plans without deferred levels. The static
+        verifier lowers this and asserts zero cross-device collectives on
+        the deferred levels (CC020)."""
+        if self.defer_step is None:
+            return None
+        return self.defer_step.variants[0]
 
 
 def plan_train(cfg, shape_cfg, mesh: Mesh,

@@ -477,3 +477,45 @@ class ShardedKV:
         if due is None:
             raise ValueError("deferred store: pass due (0..n_deferred)")
         return self._tick_fns[due]
+
+    def raw_flush_fn(self) -> Callable:
+        """The per-shard flush program (full commit of the cascade)."""
+        if self.synchronized:
+            raise ValueError("synchronized store has nothing to flush")
+        return self._flush_fn
+
+    def tick_arg_specs(self, batch: int) -> tuple:
+        """Per-shard abstract args of :meth:`raw_tick_fn` for a ``batch``-
+        update tick — what the static verifier traces/lowers the tick
+        against (``jax.ShapeDtypeStruct`` leaves, no device state)."""
+        cfg = self.config
+        table = jax.ShapeDtypeStruct((cfg.n_keys, cfg.cols), self.settled.dtype)
+        keys = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        vals = jax.ShapeDtypeStruct((batch, cfg.cols), self.settled.dtype)
+        if self.synchronized:
+            return (table, keys, vals)
+        pendings = tuple(table for _ in range(self.n_deferred))
+        if cfg.engine == "kernel":
+            return (table, pendings, keys, vals)
+        cache = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), self.cache)
+        return (table, pendings, cache, keys, vals)
+
+    @property
+    def donate_argnums(self) -> tuple:
+        """The state arg positions :meth:`tick` donates (in-place update
+        buffers the compiled module must alias, not copy)."""
+        if self.synchronized:
+            return (0,)
+        return (0, 1) if self.config.engine == "kernel" else (0, 1, 2)
+
+    def scheduled_manifest(self, due: Optional[int] = None) -> list:
+        """The collective schedule a ``due``-commit tick is licensed to
+        emit (``ccache.program_manifest``); ``due=None`` = full commit."""
+        if self.synchronized:
+            return ccache.collective_manifest(self.plan, self.n_shards,
+                                              merge_fn=self.config.merge)
+        if due is None:
+            due = self.n_deferred
+        return ccache.program_manifest(self.plan, self.n_shards, due,
+                                       merge_fn=self.config.merge)
