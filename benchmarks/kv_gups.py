@@ -22,6 +22,14 @@ measurements per run, all tagged ``@repro-bench`` records:
   (``check_level_costs.py`` gates both).  The measured vector also feeds
   ``solve_defer_schedule`` for an informational auto-K record.
 
+The partitioned store (``KVConfig(partitioned=True)``) gets its own record
+family: ``kv_part_bitwise`` (same eventual state), ``pareto_part*`` GUPS,
+``kv_part_footprint`` (per-device resident bytes, replicated vs
+home-sharded — the gated >= 4x drop), ``kv_part_step/commit/launch/land``
+wire vectors (non-commit must be zero-collective; the overlapped halves
+must match ``ccache.overlap_program_manifest``), and ``kv_part_adaptive``
+(the load-driven K).
+
 Respawns under ``--xla_force_host_platform_device_count=8`` like the
 other mesh studies; the parent process keeps its single-device view.
 """
@@ -222,6 +230,105 @@ def _sub_main(quick: bool) -> None:
     emit_record({"bench": "kv_gups", "case": f"kv_defer_auto_s{S}",
                  "n_shards": S, "measured_tick_s": round(tick_s, 6),
                  **sched.as_dict()})
+
+    # ---- the partitioned store: footprint, throughput, wire -------------
+    # Home-sharded settled rows + ring pendings: per-device resident state
+    # drops from (1 + n_deferred) * R * D to R * D / S + the ring, at the
+    # same (or better) GUPS — the commit bill is identical, the non-commit
+    # tick gets cheaper (an O(B) append instead of a table-wide scatter).
+    from repro.core.defer_schedule import (AdaptiveDeferSchedule,
+                                           DeferSchedule)
+    pcfg = KVConfig(n_keys=R, cols=D, dtype=jnp.int32,
+                    use_pallas=use_pallas, partitioned=True)
+    part = ShardedKV(pcfg, S, spmd, plan=plan_priv, commit_every=K)
+    part_ov = ShardedKV(pcfg, S, spmd, plan=plan_priv,
+                        schedule=DeferSchedule.fixed(
+                            K, part._deferred_names, overlap=True))
+
+    keys, vals = batches("pareto", t_corr, seed=7)
+    for t in range(t_corr):
+        part.tick(keys[t], vals[t])
+        part_ov.tick(keys[t], vals[t])
+    part.flush()
+    part_ov.flush()
+    emit_record({"bench": "kv_gups", "case": f"kv_part_bitwise_s{S}",
+                 "n_shards": S, "commit_every": K, "ticks": t_corr,
+                 "match": bool(
+                     np.array_equal(part.table().astype(np.int64), ref)),
+                 "match_overlap": bool(
+                     np.array_equal(part_ov.table().astype(np.int64), ref))})
+
+    part_rates = {}
+    for label, store in (("part", part), ("part_overlap", part_ov)):
+        warm, ticks = warm_cycles * K, timed_cycles * K
+        keys, vals = batches("pareto", warm + ticks, seed=11)
+        wall = timed(store, keys, vals, warm, ticks)
+        ups = S * B * ticks / wall
+        part_rates[label] = ups
+        emit_record({"bench": "kv_gups", "case": f"pareto_{label}_s{S}",
+                     "n_shards": S, "dist": "pareto", "n_keys": R,
+                     "cols": D, "batch_per_shard": B, "ticks": ticks,
+                     "n_users": n_users, "commit_every": K,
+                     "partitioned": True, "overlap": "overlap" in label,
+                     "wall_s": round(wall, 4),
+                     "updates_per_s": round(ups, 1),
+                     "gups": round(ups / 1e9, 6)})
+    emit_record({"bench": "kv_gups", "case": f"pareto_part_speedup_s{S}",
+                 "n_shards": S, "dist": "pareto", "commit_every": K,
+                 "partitioned": True,
+                 "gups_speedup_x": round(part_rates["part"]
+                                         / rates["sync"], 3)})
+
+    # per-device resident footprint: the tentpole's memory claim (the
+    # gated record uses the NON-overlapped store — an in-flight launched
+    # aggregate is a transient dense table during its 1-tick window)
+    repl_bytes = priv.resident_state_bytes()
+    part_bytes = part.resident_state_bytes()
+    emit_record({"bench": "kv_gups", "case": f"kv_part_footprint_s{S}",
+                 "n_shards": S, "commit_every": K, "n_keys": R, "cols": D,
+                 "resident_bytes_replicated": repl_bytes,
+                 "resident_bytes_partitioned": part_bytes,
+                 "resident_drop_x": round(repl_bytes / part_bytes, 2),
+                 "gups_vs_sync_x": round(part_rates["part"]
+                                         / rates["sync"], 3)})
+
+    # wire: the partitioned non-commit tick must move zero collective
+    # bytes (CC020); the commit and the overlapped launch/land halves
+    # must match their scheduled manifests (CC021, scripts/lint_plans.py)
+    def _batched(specs):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((S,) + s.shape, s.dtype), specs)
+
+    p_specs = _batched(part.tick_arg_specs(B))
+    w_pstep = _walk(part.raw_tick_fn(0), *p_specs)
+    w_pcommit = _walk(part.raw_tick_fn(part.n_deferred), *p_specs)
+    po_specs = _batched(part_ov.tick_arg_specs(B))
+    po_land = _batched(part_ov.tick_arg_specs(B, land=True))
+    w_launch = _walk(part_ov.raw_tick_fn(part_ov.n_deferred), *po_specs)
+    w_land = _walk(part_ov.raw_tick_fn(0, land=True), *po_land)
+    _emit_wire("kv_part_step", w_pstep, {"partitioned": True})
+    _emit_wire("kv_part_commit", w_pcommit,
+               {"partitioned": True, "commit_every": K})
+    _emit_wire("kv_part_launch", w_launch,
+               {"partitioned": True, "overlap": True, "half": "launch",
+                "commit_every": K})
+    _emit_wire("kv_part_land", w_land,
+               {"partitioned": True, "overlap": True, "half": "land",
+                "commit_every": K})
+
+    # informational: the adaptive schedule's K at the measured ingest rate
+    ad = AdaptiveDeferSchedule(plan_priv,
+                               w_sync["wire_bytes_by_level_total"], names,
+                               base_compute_s=0.0,
+                               per_update_s=tick_s / (S * B),
+                               k_max=max(K, 2), merge_fn=cfg.merge)
+    k_idle = ad.period
+    ad.observe(S * B)
+    for _ in range(ad.period):
+        ad.due_count(0)
+    emit_record({"bench": "kv_gups", "case": f"kv_part_adaptive_s{S}",
+                 "n_shards": S, "k_idle": k_idle, "k_loaded": ad.period,
+                 **ad.as_dict()})
 
     # blocked-engine counters: the faithful merge-on-evict model on a
     # short skewed stream (Fig. 9's events at serving granularity)

@@ -203,6 +203,14 @@ def main() -> None:
         if am is not None and am.get("top_level_amortization_x"):
             summary["kv_defer_amortization_x"] = \
                 am["top_level_amortization_x"]
+        psp = next((r for c, r in cases.items()
+                    if str(c).startswith("pareto_part_speedup")), None)
+        if psp is not None:
+            summary["kv_part_speedup_x"] = psp.get("gups_speedup_x")
+        foot = next((r for c, r in cases.items()
+                     if str(c).startswith("kv_part_footprint")), None)
+        if foot is not None and foot.get("resident_drop_x"):
+            summary["kv_part_resident_drop_x"] = foot["resident_drop_x"]
 
     if want("lm"):
         from benchmarks.lm_tier import (bench_cscatter, bench_grad_accum,

@@ -72,6 +72,8 @@ SUMMARY_KEYS = {
     "kv_gups_speedup_skewed_x": True,
     "kv_gups_speedup_uniform_x": True,
     "kv_defer_amortization_x": True,
+    "kv_part_speedup_x": True,
+    "kv_part_resident_drop_x": True,
 }
 
 # (bench, case, metric, benefit?) gated per-record at generation time.
@@ -95,6 +97,9 @@ CASE_METRICS = [
     # kv_gups: the serving tier's GUPS contest on the forced 8-way mesh.
     ("kv_gups", "pareto_speedup_s8", "gups_speedup_x", True),
     ("kv_gups", "kv_defer_amortized_s8", "top_level_amortization_x", True),
+    # partitioned serving tier: home-sharded table + overlapped commits.
+    ("kv_gups", "pareto_part_speedup_s8", "gups_speedup_x", True),
+    ("kv_gups", "kv_part_footprint_s8", "resident_drop_x", True),
 ]
 
 

@@ -42,6 +42,18 @@ When the stream carries ``kv_gups`` records (the serving tier,
    collective bytes, and the K-cycle amortized top-level bytes undercut
    the sync tick's by >= K/2.
 
+When the stream carries ``kv_part_*`` records (the partitioned serving
+tier: home-sharded settled rows, spill-through-eviction pendings,
+launch/land overlapped commits), the partitioning invariants are
+enforced too:
+
+10. partitioned correctness + throughput — the partitioned store (and
+    its overlapped variant) matches the synchronized reference bitwise
+    after flush, at >= 2x the reference's GUPS;
+11. partitioned memory + wire — resident per-device state drops by
+    >= 4x vs the replicated store, and a non-commit partitioned tick
+    moves zero collective bytes (reads route to the home shard).
+
 A regression in the classifier (hlo_cost), the permutes, the engine's
 stage compilation, or the defer-schedule solver breaks one of these long
 before it breaks correctness tests — this is the cost model's canary.
@@ -214,6 +226,45 @@ def main() -> None:
                  f"< K/2 = {kk / 2}")
         kv_msg = (f", kv: bitwise OK, pareto speedup {sx}x, "
                   f"amortization {kx}x/K={kk}")
+
+        # partitioned serving tier: home-sharded settled table with
+        # spill-through-eviction pendings and overlapped commits
+        pbit = _kv("kv_part_bitwise")
+        if pbit is not None:
+            if not pbit.get("match") or not pbit.get("match_overlap"):
+                fail(f"kv_gups: partitioned store diverges from the "
+                     f"synchronized reference after flush (record {pbit}); "
+                     f"home routing or the launch/land split lost updates")
+            psp = _kv("pareto_part_speedup")
+            if psp is None:
+                fail("kv_gups partitioned records present but no "
+                     "pareto_part_speedup row")
+            px = psp.get("gups_speedup_x") or 0
+            if px < 2.0:
+                fail(f"kv_gups: partitioned serving only {px}x sync GUPS "
+                     f"on the Pareto-skewed trace (< 2x); partitioning "
+                     f"must not forfeit the deferred-commit win")
+            foot = _kv("kv_part_footprint")
+            if foot is None:
+                fail("kv_gups partitioned records present but no "
+                     "kv_part_footprint row")
+            dx = foot.get("resident_drop_x") or 0
+            if dx < 4.0:
+                fail(f"kv_gups: partitioned resident state only {dx}x "
+                     f"smaller than the replicated store (< 4x); the "
+                     f"home-sharded table no longer bounds per-device "
+                     f"memory")
+            pstep = _kv("kv_part_step")
+            if pstep is None:
+                fail("kv_gups partitioned records present but no "
+                     "kv_part_step row; the routed-read wire walk did "
+                     "not run")
+            diag = check_noncommit_record(
+                pstep, site=f"kv_gups:{pstep.get('case')}")
+            if diag is not None:
+                fail(f"kv_gups: {diag.format()}")
+            kv_msg += (f", partitioned: speedup {px}x, "
+                       f"resident drop {dx}x")
 
     print(f"check_level_costs: OK (top-level reduction "
           f"{flat[-1] / hier['hier3_lane']['wire_bytes_by_level_total'][-1]:.0f}x, "

@@ -202,6 +202,29 @@ def _sub_serve() -> None:
     on_cpu = jax.default_backend() == "cpu"
     R, D, B = 256, 2, 32
     cfg = KVConfig(n_keys=R, cols=D, dtype=jnp.int32)
+    # All serving plans share one level geometry; the walk cost model
+    # needs only sizes/names, which are defer-invariant.
+    base_plan = serving_plan(S, "all")
+    sizes = tuple(lv.size for lv in base_plan.levels)
+    names = tuple(lv.name for lv in base_plan.levels)
+
+    def batched(specs):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((S,) + s.shape, s.dtype), specs)
+
+    def walk(fn, specs, donate=()):
+        def region(*locals_):
+            loc = [jax.tree.map(lambda x: x[0], a) for a in locals_]
+            out = fn(*loc)
+            return jax.tree.map(lambda x: x[None], out)
+
+        f = jax.jit(shard_map(region, mesh=mesh,
+                              in_specs=(P(axis),) * len(specs),
+                              out_specs=P(axis), check_rep=False),
+                    donate_argnums=donate)
+        hlo = f.lower(*batched(specs)).compile().as_text()
+        return hlo, hlo_cost.analyze_hlo(hlo, level_sizes=sizes,
+                                         level_names=names)
 
     for defer in ("all", "top", "none"):
         plan = serving_plan(S, defer)
@@ -209,25 +232,6 @@ def _sub_serve() -> None:
                           **({} if defer == "none" else {"commit_every": 4}))
         site = f"kv[{defer}]"
         specs = store.tick_arg_specs(B)
-        sizes = tuple(lv.size for lv in plan.levels)
-        names = tuple(lv.name for lv in plan.levels)
-
-        def walk(fn, donate=()):
-            def region(*locals_):
-                loc = [jax.tree.map(lambda x: x[0], a) for a in locals_]
-                out = fn(*loc)
-                return jax.tree.map(lambda x: x[None], out)
-
-            f = jax.jit(shard_map(region, mesh=mesh,
-                                  in_specs=(P(axis),) * len(specs),
-                                  out_specs=P(axis), check_rep=False),
-                        donate_argnums=donate)
-            args = jax.tree.map(
-                lambda s: jax.ShapeDtypeStruct((S,) + s.shape, s.dtype),
-                specs)
-            hlo = f.lower(*args).compile().as_text()
-            return hlo, hlo_cost.analyze_hlo(hlo, level_sizes=sizes,
-                                             level_names=names)
 
         # plan/trait audit (CC013/CC014)
         emit({"checked": f"{site}:plan"})
@@ -246,14 +250,12 @@ def _sub_serve() -> None:
                 f"{site}:jaxpr[due=0]"))
 
         # HLO placement lint: every tick program vs its scheduled manifest
-        dues = (["sync"] if store.synchronized
-                else list(range(store.n_deferred + 1)))
-        for due in dues:
+        for due in store.supported_dues:
             prog_site = f"{site}:tick[due={due}]"
             emit({"checked": prog_site})
             fn = (store.raw_tick_fn() if due == "sync"
                   else store.raw_tick_fn(due))
-            _, w = walk(fn)
+            _, w = walk(fn, specs)
             manifest = (store.scheduled_manifest() if due == "sync"
                         else store.scheduled_manifest(due))
             emit_diags(placement.check_commit_walk(w, manifest, prog_site))
@@ -263,10 +265,53 @@ def _sub_serve() -> None:
         emit({"checked": don_site})
         fn = (store.raw_tick_fn() if store.synchronized
               else store.raw_tick_fn(store.n_deferred))
-        hlo, _ = walk(fn, donate=store.donate_argnums)
-        args = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct((S,) + s.shape, s.dtype), specs)
-        expected = placement.donated_param_numbers(args,
+        hlo, _ = walk(fn, specs, donate=store.donate_argnums)
+        expected = placement.donated_param_numbers(batched(specs),
+                                                   store.donate_argnums)
+        emit_diags(placement.check_donation(hlo, expected, don_site,
+                                            require=not on_cpu))
+
+    # partitioned stores: home-sharded settled rows, launch/land halves.
+    # The tick signature differs from the replicated kernel store (ring /
+    # cache+spill pendings), so the kv-taint unpack does not apply; the
+    # noncommit region lint and the manifest/donation walks do.
+    from repro.core.defer_schedule import DeferSchedule
+
+    plan = serving_plan(S, "all")
+    pcfg = KVConfig(n_keys=R, cols=D, dtype=jnp.int32, partitioned=True)
+    pstore = ShardedKV(pcfg, S, spmd, plan=plan, commit_every=4)
+    ostore = ShardedKV(pcfg, S, spmd, plan=plan,
+                       schedule=DeferSchedule.fixed(
+                           4, pstore._deferred_names, overlap=True))
+    for label, store in (("part", pstore), ("part-ov", ostore)):
+        site = f"kv[{label}]"
+        emit({"checked": f"{site}:plan"})
+        emit_diags(audit_plan(plan, S, merge_fn=pcfg.merge,
+                              site=f"{site}:plan"))
+
+        specs0 = store.tick_arg_specs(B)
+        emit({"checked": f"{site}:jaxpr[due=0]"})
+        emit_diags(check_noncommit_region(
+            store.raw_tick_fn(0), axis, S, specs0,
+            f"{site}:jaxpr[due=0]"))
+
+        variants = [(due, False) for due in store.supported_dues]
+        if store._overlap:
+            variants += [(0, True), (store.n_deferred, True)]
+        for due, land in variants:
+            tag = f"due={due}" + (",land" if land else "")
+            prog_site = f"{site}:tick[{tag}]"
+            emit({"checked": prog_site})
+            vspecs = store.tick_arg_specs(B, land=land)
+            _, w = walk(store.raw_tick_fn(due, land=land), vspecs)
+            manifest = store.scheduled_manifest(due, land=land)
+            emit_diags(placement.check_commit_walk(w, manifest, prog_site))
+
+        don_site = f"{site}:donation"
+        emit({"checked": don_site})
+        hlo, _ = walk(store.raw_tick_fn(store.n_deferred), specs0,
+                      donate=store.donate_argnums)
+        expected = placement.donated_param_numbers(batched(specs0),
                                                    store.donate_argnums)
         emit_diags(placement.check_donation(hlo, expected, don_site,
                                             require=not on_cpu))

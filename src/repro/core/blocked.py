@@ -134,6 +134,180 @@ def cop_scatter(cache: BlockedCache, table: Array, rows: Array, vals: Array,
     return cache, table
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SpillBuffer:
+    """Bounded home for the cache's evicted mass between commits.
+
+    The partitioned serving tier (serve/kv.py) has no dense per-device
+    pending table to absorb evictions into — evicted blocks *spill* here
+    instead, as accumulated update deltas keyed by block id, and the
+    commit drains the buffer through the merge cascade. Capacity is
+    ``slots`` blocks: per-device pending state is bounded at
+    ``(ways + slots) * block_rows`` rows however large the table is.
+
+    An eviction that finds neither a matching nor a free slot increments
+    ``n_overflow`` and its delta is LOST — the driver must check the
+    counter at every commit and fail loudly (ShardedKV does); size
+    ``slots`` at the distinct blocks a commit cycle can evict.
+    """
+
+    block_ids: Array   # i32[slots], -1 = free
+    vals: Array        # [slots, block_rows, cols] accumulated deltas
+    n_spills: Array    # i32[]  evictions absorbed (incl. coalesced)
+    n_overflow: Array  # i32[]  evictions dropped for want of a slot
+
+
+def init_spill(slots: int, block_rows: int, cols: int, dtype,
+               merge: MergeFn) -> SpillBuffer:
+    return SpillBuffer(
+        block_ids=jnp.full((slots,), -1, jnp.int32),
+        vals=merge.identity((slots, block_rows, cols), dtype),
+        n_spills=jnp.zeros((), jnp.int32),
+        n_overflow=jnp.zeros((), jnp.int32),
+    )
+
+
+def _spill_block(spill: SpillBuffer, bid: Array, u: Array,
+                 merge: MergeFn) -> SpillBuffer:
+    """Fold one evicted block delta into the buffer: coalesce into the
+    slot already holding ``bid``, else claim the first free slot."""
+    hits = spill.block_ids == bid
+    hit = jnp.any(hits)
+    free = spill.block_ids < 0
+    ok = hit | jnp.any(free)
+    slot = jnp.where(ok, jnp.where(hit, jnp.argmax(hits), jnp.argmax(free)),
+                     0)
+    merged = merge.apply(spill.vals[slot], u)
+    vals = spill.vals.at[slot].set(
+        jnp.where(ok, merged, spill.vals[slot]))
+    ids = spill.block_ids.at[slot].set(
+        jnp.where(ok, bid, spill.block_ids[slot]))
+    return dataclasses.replace(
+        spill, block_ids=ids, vals=vals,
+        n_spills=spill.n_spills + ok.astype(jnp.int32),
+        n_overflow=spill.n_overflow + (~ok).astype(jnp.int32))
+
+
+def spill_scatter(cache: BlockedCache, spill: SpillBuffer, rows: Array,
+                  vals: Array, merge: MergeFn
+                  ) -> tuple[BlockedCache, SpillBuffer]:
+    """:func:`cop_scatter` with no backing table: privatize over the merge
+    identity, spill-through-eviction into ``spill``.
+
+    The cache accumulates pending *deltas* (src copies are identity rows,
+    so ``delta(src, upd)`` is exactly the unmerged mass); a dirty LRU
+    eviction folds its delta into the spill buffer instead of a dense
+    table. Same faithful access-by-access model and Fig. 9 counters as
+    ``cop_scatter``.
+    """
+    ways, block_rows, cols = cache.upd_vals.shape
+    ident_block = merge.identity((block_rows, cols), cache.upd_vals.dtype)
+
+    def step(carry, rv):
+        cache, spill = carry
+        row, val = rv
+        block = row // block_rows
+        line = row % block_rows
+
+        hits = cache.block_ids == block
+        hit = jnp.any(hits)
+        way_hit = jnp.argmax(hits)
+        free = cache.block_ids < 0
+        any_free = jnp.any(free)
+        way_free = jnp.argmax(free)
+        way_lru = jnp.argmin(jnp.where(cache.block_ids < 0,
+                                       jnp.iinfo(jnp.int32).max, cache.clock))
+        victim = jnp.where(hit, way_hit,
+                           jnp.where(any_free, way_free, way_lru))
+
+        must_evict = (~hit) & (~any_free)
+        evict_dirty = must_evict & cache.dirty[victim]
+        u = merge.delta(cache.src_vals[victim], cache.upd_vals[victim])
+        spill = lax.cond(
+            evict_dirty,
+            lambda s: _spill_block(s, cache.block_ids[victim], u, merge),
+            lambda s: s,
+            spill)
+        n_evict = cache.n_evict_merges + evict_dirty.astype(jnp.int32)
+        n_silent = cache.n_silent_evicts + (
+            must_evict & ~cache.dirty[victim]).astype(jnp.int32)
+
+        # (Re)fill on miss: both copies start at the merge identity — the
+        # cache privatizes the pending delta, not a memory block.
+        src_vals = lax.cond(
+            hit, lambda s: s,
+            lambda s: s.at[victim].set(ident_block), cache.src_vals)
+        upd_vals = lax.cond(
+            hit, lambda up: up,
+            lambda up: up.at[victim].set(ident_block), cache.upd_vals)
+        block_ids = cache.block_ids.at[victim].set(block)
+        dirty = lax.cond(hit, lambda d: d,
+                         lambda d: d.at[victim].set(False), cache.dirty)
+
+        upd_vals = upd_vals.at[victim, line].set(
+            merge.combine(upd_vals[victim, line], val))
+        dirty = dirty.at[victim].set(True)
+        clock = cache.clock.at[victim].set(cache.tick)
+
+        new_cache = BlockedCache(
+            block_ids=block_ids, src_vals=src_vals, upd_vals=upd_vals,
+            dirty=dirty, clock=clock, tick=cache.tick + 1,
+            n_evict_merges=n_evict, n_silent_evicts=n_silent,
+            n_flush_merges=cache.n_flush_merges)
+        return (new_cache, spill), None
+
+    vals = vals.reshape(rows.shape[0], cols)
+    (cache, spill), _ = lax.scan(step, (cache, spill),
+                                 (rows.astype(jnp.int32), vals))
+    return cache, spill
+
+
+def spill_drain(spill: SpillBuffer, table: Array, merge: MergeFn
+                ) -> tuple[SpillBuffer, Array]:
+    """Fold every spilled block delta into ``table`` and empty the buffer
+    (the commit-side half of spill-through-eviction)."""
+    slots, block_rows, _ = spill.vals.shape
+    for slot in range(slots):  # static, small (like flush's way loop)
+        valid = spill.block_ids[slot] >= 0
+
+        def fold(t, s=slot):
+            start = spill.block_ids[s] * block_rows
+            mem = lax.dynamic_slice_in_dim(t, start, block_rows, axis=0)
+            mem = merge.apply(mem, spill.vals[s])
+            return lax.dynamic_update_slice_in_dim(t, mem, start, axis=0)
+
+        table = lax.cond(valid, fold, lambda t: t, table)
+    spill = dataclasses.replace(
+        spill,
+        block_ids=jnp.full((slots,), -1, jnp.int32),
+        vals=merge.identity(spill.vals.shape, spill.vals.dtype))
+    return spill, table
+
+
+def spill_read_row(cache: BlockedCache, spill: SpillBuffer,
+                   row: Array, merge: MergeFn) -> Array:
+    """The unmerged pending delta for one row: resident way's
+    ``delta(src, upd)`` combined with any spilled mass for its block
+    (identity when neither holds it) — ``c_read_row`` semantics for the
+    table-less spill configuration."""
+    block_rows = cache.upd_vals.shape[1]
+    block, line = row // block_rows, row % block_rows
+    ident = merge.identity(cache.upd_vals.shape[-1:],
+                           cache.upd_vals.dtype)
+
+    c_hits = cache.block_ids == block
+    c_way = jnp.argmax(c_hits)
+    resident = merge.delta(cache.src_vals[c_way],
+                           cache.upd_vals[c_way])[line]
+    out = jnp.where(jnp.any(c_hits), resident, ident)
+
+    s_hits = spill.block_ids == block
+    s_slot = jnp.argmax(s_hits)
+    spilled = jnp.where(jnp.any(s_hits), spill.vals[s_slot, line], ident)
+    return merge.combine(out, spilled)
+
+
 def c_read_row(cache: BlockedCache, table: Array, row: Array) -> Array:
     """Read a row through the cache (update copy if resident, else memory)."""
     block_rows = cache.upd_vals.shape[1]

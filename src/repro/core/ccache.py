@@ -555,6 +555,31 @@ def settle_inflight(inflight: PyTree, axis_name, merge_fn: MergeFn,
                        force_tree)
 
 
+def launch_inflight(update: PyTree, axis_name, merge_fn: MergeFn,
+                    topology: Topology, compress: bool = False,
+                    force_tree: bool = False) -> PyTree:
+    """Run every deferred stage EXCEPT the top on ``update`` — the launch
+    half of an overlapped full commit, the complement of
+    :func:`settle_inflight`.
+
+    The returned aggregate is the in-flight value :func:`overlap_cascade`
+    would carry: settled through the cheap inner deferred levels, with the
+    expensive top-level exchange left for the land program (where it rides
+    alongside the next step's independent compute). ``launch_inflight``
+    then ``settle_inflight`` composes to exactly :func:`settle_deferred`.
+    """
+    plan, axis_name, size = _resolve_plan(topology, axis_name, compress)
+    if plan is None:
+        raise ValueError("launch_inflight needs a MergePlan with deferred "
+                         "levels (got a degenerate/flat topology)")
+    _, deferred = split_eager_deferred(
+        compile_plan(plan, size, merge_fn=merge_fn))
+    if not deferred:
+        raise ValueError("launch_inflight: plan has no deferred stages")
+    return _run_stages(update, axis_name, merge_fn, deferred[:-1], size,
+                       force_tree)
+
+
 def commit_launch(pending: "PendingUpdate", axis_name, merge_fn: MergeFn,
                   topology: Topology, compress: bool = False,
                   force_tree: bool = False) -> PyTree:
@@ -717,6 +742,34 @@ def program_manifest(topology: Topology, axis_size: int, due: int,
         raise ValueError(f"program_manifest: due={due} out of range "
                          f"[0, {len(deferred)}]")
     return eager + deferred[:due]
+
+
+def overlap_program_manifest(topology: Topology, axis_size: int, half: str,
+                             merge_fn: Optional[MergeFn] = None,
+                             compress: bool = False,
+                             force_tree: bool = False) -> list[StageManifest]:
+    """Manifest of one half of an *overlapped* full commit.
+
+    ``half="launch"`` — the commit tick's program: every eager stage plus
+    every deferred stage below the top (:func:`launch_inflight`); the top
+    exchange is withheld. ``half="land"`` — the following tick's program:
+    the top deferred stage alone (:func:`settle_inflight`), riding next to
+    that tick's collective-free scatter. The two halves partition the full
+    ``program_manifest(due=n_deferred)`` schedule, so an HLO walk of each
+    compiled half can be CC021-checked independently.
+    """
+    if half not in ("launch", "land"):
+        raise ValueError(f"half must be 'launch' or 'land', got {half!r}")
+    manifest = collective_manifest(topology, axis_size, merge_fn=merge_fn,
+                                   compress=compress, force_tree=force_tree)
+    deferred = [m for m in manifest if m.defer]
+    if not deferred:
+        raise ValueError("overlap_program_manifest: topology has no "
+                         "deferred stages to overlap")
+    if half == "land":
+        return [deferred[-1]]
+    eager = [m for m in manifest if not m.defer]
+    return eager + deferred[:-1]
 
 
 def deferred_stages_of(topology: Topology, axis_size: int,

@@ -89,6 +89,15 @@ class DeferSchedule:
         """Steps per full (optimizer-visible) commit cycle."""
         return self.intervals[-1]
 
+    @property
+    def max_period(self) -> int:
+        """Upper bound on ``period`` over the schedule's lifetime. A fixed
+        schedule never changes, so this IS the period; adaptive schedules
+        report their ``k_max`` so capacity sized against ``max_period``
+        (e.g. the partitioned store's pending ring) stays sufficient
+        through re-solves."""
+        return self.period
+
     def due_count(self, step: int) -> int:
         """How many leading deferred levels commit after completing the
         ``step``-th accumulation step (1-based). Nesting makes the due set
@@ -140,6 +149,144 @@ class DeferSchedule:
                       f"MB/step -> {t['amortized_bytes_per_step'] / 1e6:.3f} "
                       f"MB/step ({t['interval']}x)")
         return s
+
+
+class AdaptiveDeferSchedule:
+    """A uniform commit interval re-solved from the measured ingest rate.
+
+    The static solver picks K once from a dryrun's compute estimate; a
+    serving tier's per-tick work scales with load, so the right K drifts
+    with traffic. This schedule keeps an EMA of updates/tick (fed by
+    :meth:`observe`), and at every full-commit boundary re-runs
+    :func:`solve_defer_schedule` with
+
+        compute_s = base_compute_s + per_update_s * ema
+
+    Heavier ingest -> larger per-tick bound -> the commit amortizes more
+    easily -> SMALLER K (commits more often, bounding staleness when the
+    wire time hides behind real work); idle traffic drifts K up toward
+    ``k_max``.
+
+    All deferred levels share one K (``DeferSchedule.fixed`` geometry) —
+    the partitioned store requires all-or-nothing commits, and the uniform
+    interval is what makes the mid-flight re-solve sound: the cycle phase
+    is tracked internally, so changing K at a boundary never skips or
+    doubles a level's commit. Duck-types the ``DeferSchedule`` surface the
+    store uses (``level_names`` / ``due_count`` / ``period`` /
+    ``max_period`` / ``overlap`` / ``as_dict``). ``due_count`` advances
+    the internal phase — call it exactly once per tick, as
+    ``ShardedKV.tick`` does.
+    """
+
+    def __init__(self, plan, wire_bytes_by_level: Sequence[float],
+                 level_names: Optional[Sequence[str]] = None, *,
+                 base_compute_s: float = 0.0, per_update_s: float = 0.0,
+                 ema_alpha: float = 0.25, overlap: bool = False,
+                 k_min: int = 1, k_max: int = 64, **solve_kwargs):
+        if not 0.0 < ema_alpha <= 1.0:
+            raise ValueError(f"ema_alpha must be in (0, 1], got {ema_alpha}")
+        if per_update_s < 0.0 or base_compute_s < 0.0:
+            raise ValueError("base_compute_s and per_update_s must be >= 0")
+        self._plan = plan
+        self._vec = tuple(float(b) for b in wire_bytes_by_level)
+        self._measured_names = (tuple(level_names)
+                                if level_names is not None else None)
+        self._base = float(base_compute_s)
+        self._per_update = float(per_update_s)
+        self._alpha = float(ema_alpha)
+        self._k_min, self._k_max = int(k_min), int(k_max)
+        self._overlap = bool(overlap)
+        self._solve_kwargs = dict(solve_kwargs)
+        self._ema: Optional[float] = None
+        self._phase = 0
+        self._n_resolves = 0
+        self._current = self._solve()
+
+    def _solve(self) -> DeferSchedule:
+        load = self._ema if self._ema is not None else 0.0
+        solved = solve_defer_schedule(
+            self._plan, self._vec, self._measured_names,
+            compute_s=self._base + self._per_update * load,
+            k_min=self._k_min, k_max=self._k_max,
+            overlap=self._overlap, **self._solve_kwargs)
+        # Collapse to one uniform K (the solved full-commit period): the
+        # partitioned store commits all-or-nothing.
+        uniform = DeferSchedule(
+            level_names=solved.level_names,
+            intervals=(solved.period,) * len(solved.level_names),
+            predicted=solved.predicted, overlap=self._overlap)
+        self._n_resolves += 1
+        return uniform
+
+    def observe(self, n_updates: int) -> None:
+        """Feed one tick's real (non-padding) update count into the EMA."""
+        n = float(n_updates)
+        self._ema = n if self._ema is None else (
+            self._alpha * n + (1.0 - self._alpha) * self._ema)
+
+    def due_count(self, step: int) -> int:
+        """Advance one tick; all levels are due at the cycle boundary,
+        none otherwise. Re-solves K from the current EMA at each boundary
+        (the passed absolute ``step`` is ignored — the phase is internal,
+        so a K change realigns cleanly)."""
+        self._phase += 1
+        if self._phase >= self._current.period:
+            self._phase = 0
+            due = len(self._current.level_names)
+            self._current = self._solve()
+            return due
+        return 0
+
+    def reset(self) -> None:
+        """Forget phase and load history (after an out-of-band flush)."""
+        self._phase = 0
+        self._ema = None
+        self._current = self._solve()
+
+    @property
+    def level_names(self) -> tuple:
+        return self._current.level_names
+
+    @property
+    def intervals(self) -> tuple:
+        return self._current.intervals
+
+    @property
+    def period(self) -> int:
+        """The CURRENT cycle length; changes as the EMA moves."""
+        return self._current.period
+
+    @property
+    def max_period(self) -> int:
+        """K never exceeds the solver's ``k_max`` — size ring capacity
+        against this, not the drifting ``period``."""
+        return self._k_max
+
+    @property
+    def overlap(self) -> bool:
+        return self._overlap
+
+    @property
+    def predicted(self) -> Optional[dict]:
+        return self._current.predicted
+
+    def as_dict(self) -> dict:
+        out = self._current.as_dict()
+        out["adaptive"] = {
+            "ema_updates_per_tick": self._ema,
+            "ema_alpha": self._alpha,
+            "base_compute_s": self._base,
+            "per_update_s": self._per_update,
+            "k_min": self._k_min, "k_max": self._k_max,
+            "n_resolves": self._n_resolves,
+        }
+        return out
+
+    def describe(self) -> str:
+        load = "unobserved" if self._ema is None else f"{self._ema:.1f}"
+        return (self._current.describe()
+                + f"; adaptive (ema {load} updates/tick, "
+                  f"K in [{self._k_min}, {self._k_max}])")
 
 
 def _resolve_bandwidths(n: int, names: Sequence[str],
@@ -204,6 +351,11 @@ def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
             merge_fn.check_overlap("solve_defer_schedule(overlap=True)")
         else:
             merge_fn.check_deferrable("solve_defer_schedule")
+    if k_min < 1:
+        raise ValueError(f"k_min must be >= 1, got {k_min}")
+    if k_max < k_min:
+        raise ValueError(f"k_max={k_max} < k_min={k_min}: the interval "
+                         f"window is empty — no commit schedule exists")
     exec_levels = [lv for lv in plan.levels if lv.size > 1]
     names = (tuple(level_names) if level_names is not None
              else tuple(lv.name for lv in exec_levels))
@@ -249,7 +401,18 @@ def solve_defer_schedule(plan, wire_bytes_by_level: Sequence[float],
         k = max(k, k_min, prev_k)
         k = ((k + prev_k - 1) // prev_k) * prev_k      # nest on the level below
         if k > k_max:
-            k = max(prev_k, (k_max // prev_k) * prev_k)
+            # Clamp to the largest multiple of the inner interval that
+            # still fits. `max(prev_k, ...)` here would let prev_k escape
+            # the clamp whenever k_max < prev_k (the rounded-down multiple
+            # is 0) — that geometry has no valid nested interval at all,
+            # so raise instead of silently exceeding k_max.
+            k = (k_max // prev_k) * prev_k
+            if k < prev_k:
+                raise ValueError(
+                    f"level {lv.name!r}: no nested commit interval fits — "
+                    f"the level below commits every {prev_k} steps but "
+                    f"k_max={k_max} < {prev_k}; raise k_max or loosen the "
+                    f"inner levels' intervals")
         intervals.append(k)
         entry = {"name": lv.name, "interval": k,
                  "bytes_per_step": b,

@@ -16,6 +16,13 @@ production.
 * ``auto`` — walk the compiled sync tick's HLO for the per-level wire
   vector, hand it to ``solve_defer_schedule`` with the measured tick
   time, and serve with the solved schedule (printed before the run).
+* ``adaptive`` — same roofline inputs, but the commit interval re-solves
+  online from the measured ingest rate (``AdaptiveDeferSchedule``).
+
+``--partitioned`` home-shards the settled table over the mesh (each row
+lives on exactly one shard; reads route by ``key % shards``) and bounds
+pending state with ring/spill buffers; ``--overlap`` additionally
+pipelines the commit's launch/land halves (requires ``--partitioned``).
 """
 
 from __future__ import annotations
@@ -39,7 +46,16 @@ def _parse_args(argv=None):
     p.add_argument("--batch", type=int, default=512,
                    help="updates per shard per tick")
     p.add_argument("--defer", default="8",
-                   help="sync | auto | K (fixed commit interval)")
+                   help="sync | auto | adaptive | K (fixed commit "
+                        "interval)")
+    p.add_argument("--partitioned", action="store_true",
+                   help="home-shard the settled table over the mesh "
+                        "(routed reads, ring/spill pendings)")
+    p.add_argument("--overlap", action="store_true",
+                   help="overlap the commit's launch/land halves "
+                        "(requires --partitioned)")
+    p.add_argument("--spill-blocks", type=int, default=64,
+                   help="blocked engine, partitioned: spill buffer slots")
     p.add_argument("--consistency", default="eventual",
                    choices=["eventual", "read_your_writes"])
     p.add_argument("--engine", default="kernel",
@@ -90,7 +106,9 @@ def main(argv=None) -> None:
     from jax.sharding import PartitionSpec as P
 
     from repro.apps.sharded import build_mesh, mesh_spmd
-    from repro.core.defer_schedule import solve_defer_schedule
+    from repro.core.defer_schedule import (AdaptiveDeferSchedule,
+                                           DeferSchedule,
+                                           solve_defer_schedule)
     from repro.launch import hlo_cost
     from repro.serve import KVConfig, ShardedKV, serving_plan
 
@@ -102,15 +120,32 @@ def main(argv=None) -> None:
 
     cfg = KVConfig(n_keys=R, cols=D, dtype=jnp.int32,
                    consistency=args.consistency, engine=args.engine,
-                   ways=args.ways, use_pallas=use_pallas)
+                   ways=args.ways, use_pallas=use_pallas,
+                   partitioned=args.partitioned,
+                   spill_blocks=args.spill_blocks)
     sync_mode = args.defer == "sync"
+    if args.partitioned and sync_mode:
+        raise SystemExit("--partitioned needs deferred commits; pick "
+                         "--defer K|auto|adaptive")
+    if args.overlap and not args.partitioned:
+        raise SystemExit("--overlap pipelines the partitioned store's "
+                         "commit; add --partitioned")
+    if args.partitioned and R % S:
+        raise SystemExit(f"--partitioned needs --keys divisible by "
+                         f"--shards (got {R} % {S} = {R % S})")
     plan = serving_plan(S, "none" if sync_mode else "all")
 
     schedule = commit_every = None
-    if args.defer == "auto":
+    if args.defer in ("auto", "adaptive"):
         # Walk the sync tick's compiled HLO for the wire vector, measure
-        # one deferred non-commit tick, and solve the schedule.
-        probe = ShardedKV(cfg, S, spmd, plan=serving_plan(S, "none"))
+        # one deferred non-commit tick, and solve the schedule. Both
+        # probes run the replicated store: the partitioned ring is sized
+        # by max_period, which the never-committing timer would blow up.
+        probe_cfg = KVConfig(n_keys=R, cols=D, dtype=jnp.int32,
+                             consistency=args.consistency,
+                             engine=args.engine, ways=args.ways,
+                             use_pallas=use_pallas)
+        probe = ShardedKV(probe_cfg, S, spmd, plan=serving_plan(S, "none"))
         sizes = tuple(lv.size for lv in plan.levels)
         names = tuple(lv.name for lv in plan.levels)
         group = 1
@@ -134,7 +169,7 @@ def main(argv=None) -> None:
                                     level_sizes=sizes, level_names=names)
         k0 = np.zeros((S, B), np.int32)
         v0 = np.ones((S, B, D), np.int32)
-        timer = ShardedKV(cfg, S, spmd, plan=plan,
+        timer = ShardedKV(probe_cfg, S, spmd, plan=plan,
                           commit_every=1 << 20)  # never commits in probe
         timer.tick(k0, v0)  # compile
         t0 = time.perf_counter()
@@ -142,17 +177,41 @@ def main(argv=None) -> None:
             timer.tick(k0, v0)
         jax.block_until_ready(timer.settled)
         tick_s = (time.perf_counter() - t0) / 4
-        schedule = solve_defer_schedule(
-            plan, walk["wire_bytes_by_level_total"], names,
-            compute_s=tick_s, merge_fn=cfg.merge)
+        wire = walk["wire_bytes_by_level_total"]
+        if args.defer == "adaptive":
+            # Charge the measured tick entirely to per-update work so the
+            # schedule responds to the observed ingest rate; a full batch
+            # reproduces the probe's compute bound.
+            schedule = AdaptiveDeferSchedule(
+                plan, wire, names, per_update_s=tick_s / (S * B),
+                overlap=args.overlap, merge_fn=cfg.merge)
+        else:
+            schedule = solve_defer_schedule(
+                plan, wire, names, compute_s=tick_s,
+                overlap=args.overlap, merge_fn=cfg.merge)
+            if args.partitioned:
+                # The partitioned store commits all deferred levels in
+                # one launch; collapse the nested solution to its period.
+                schedule = DeferSchedule(
+                    level_names=schedule.level_names,
+                    intervals=(schedule.period,)
+                    * len(schedule.level_names),
+                    predicted=schedule.predicted, overlap=args.overlap)
         print("solved schedule:")
         print(schedule.describe())
     elif not sync_mode:
         try:
             commit_every = int(args.defer)
         except ValueError:
-            raise SystemExit(f"--defer must be sync|auto|K, "
+            raise SystemExit(f"--defer must be sync|auto|adaptive|K, "
                              f"got {args.defer!r}")
+        if args.overlap:
+            from repro.core.merge_plan import compile_plan
+            deferred = tuple(s.name for s in compile_plan(
+                plan, S, merge_fn=cfg.merge) if s.defer)
+            schedule = DeferSchedule.fixed(commit_every, deferred,
+                                           overlap=True)
+            commit_every = None
 
     kv = ShardedKV(cfg, S, spmd, plan=plan, schedule=schedule,
                    commit_every=commit_every)

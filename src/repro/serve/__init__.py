@@ -8,4 +8,4 @@ compiles once.
 """
 
 from repro.serve.kv import KVConfig, ShardedKV, serving_plan  # noqa: F401
-from repro.serve.frontend import BatchedFrontend  # noqa: F401
+from repro.serve.frontend import BatchedFrontend, DrainBacklog  # noqa: F401

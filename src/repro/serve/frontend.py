@@ -27,6 +27,21 @@ import numpy as np
 from repro.serve.kv import ShardedKV
 
 
+class DrainBacklog(RuntimeError):
+    """A bounded :meth:`BatchedFrontend.drain` ran out of steps with
+    requests still queued. ``results`` holds every get answered before the
+    budget ran out; ``backlog`` is the number of queued entries left."""
+
+    def __init__(self, results: dict, backlog: int, steps: int):
+        super().__init__(
+            f"drain stopped after {steps} step(s) with {backlog} queued "
+            f"request(s) unanswered; raise max_steps or loop step() for "
+            f"best-effort serving")
+        self.results = results
+        self.backlog = backlog
+        self.steps = steps
+
+
 class BatchedFrontend:
     """Queue adds/gets, serve them in fixed-shape ticks.
 
@@ -109,10 +124,23 @@ class BatchedFrontend:
                 if (rid := rids[s, b]) >= 0}
 
     def drain(self, max_steps: Optional[int] = None) -> dict[int, np.ndarray]:
-        """Step until both queues are empty (or ``max_steps``)."""
+        """Step until both queues are empty, or raise after ``max_steps``.
+
+        Each shard's queue is ONE FIFO (module doc): a step serves at most
+        ``slots`` head-of-line adds then at most ``slots`` head-of-line
+        gets per shard, so a deep queue needs ``ceil(len / slots)`` steps
+        and a bounded drain can legitimately stop with gets still queued.
+        Rather than silently returning without those answers, a drain that
+        exhausts ``max_steps`` with requests still queued raises
+        :class:`DrainBacklog` carrying the partial results and the
+        leftover count — callers that want best-effort batches should loop
+        :meth:`step` against :attr:`backlog` themselves.
+        """
         results: dict[int, np.ndarray] = {}
         steps = 0
         while self.backlog and (max_steps is None or steps < max_steps):
             results.update(self.step())
             steps += 1
+        if self.backlog:
+            raise DrainBacklog(results, self.backlog, steps)
         return results

@@ -1,7 +1,8 @@
 """A sharded commutative KV store: the paper's headline app as a serving tier.
 
-The table lives replicated per device (every shard can answer any read from
-its *settled* copy); the **update stream** is what shards over the mesh axis
+By default the table lives replicated per device (every shard can answer
+any read from its *settled* copy); the **update stream** is what shards
+over the mesh axis
 — each device privatizes the updates it receives and cross-device agreement
 is an explicit, batched merge through the MergePlan engine.  This is the
 CXL-style partial-coherence structure: hot updates live in non-coherent
@@ -28,6 +29,27 @@ with ``solve_defer_schedule`` from the measured wire vector — see
 ``consistency="read_your_writes"`` routes reads through the device's own
 unmerged state (pendings + resident cache, ``c_read_row`` semantics) on
 top of the last settled table, still with zero read-path collectives.
+
+``KVConfig(partitioned=True)`` drops the replication: each settled row
+lives on exactly ONE home shard (global key ``k`` -> shard ``k % S``,
+local row ``k // S``), so the per-device settled footprint is ``n_keys /
+n_shards`` rows and reads must be routed by key — exactly how
+:class:`~repro.serve.frontend.BatchedFrontend` already routes traffic, and
+still zero read-path collectives.  Dense per-level pending tables go away
+with the replication: the kernel engine buffers a tick's raw updates in a
+bounded ring (``max_period * batch`` slots — overflow is impossible by
+construction, a full commit fires within ``max_period`` ticks and resets
+the cursor), and the blocked engine's resident cache spills evicted blocks
+into a bounded :class:`~repro.core.blocked.SpillBuffer` instead of a dense
+table (spill-through-eviction).  Commits still settle the FULL cascade on
+a transient dense delta — same collectives, same manifest — and each shard
+keeps only its home rows of the aggregate.  ``DeferSchedule(overlap=True)``
+additionally splits the commit into launch/land halves
+(``ccache.launch_inflight`` / ``settle_inflight``): the top-level exchange
+launched at the commit tick lands inside the NEXT tick's program, where it
+overlaps that tick's scatter; the settled table runs one tick stale during
+the window.  An :class:`~repro.core.defer_schedule.AdaptiveDeferSchedule`
+re-solves the commit interval from the measured updates/tick EMA.
 """
 
 from __future__ import annotations
@@ -104,6 +126,11 @@ class KVConfig:
     use_pallas: bool = False
     pallas_block_rows: Optional[int] = None
     pallas_chunk: Optional[int] = None
+    # partitioned settled table: every global row on exactly one home shard
+    # (key % n_shards); pendings become a bounded ring (kernel engine) or
+    # the blocked cache's spill-through-eviction buffer (module doc).
+    partitioned: bool = False
+    spill_blocks: int = 64
 
     def __post_init__(self):
         if self.consistency not in _CONSISTENCY:
@@ -123,6 +150,9 @@ class KVConfig:
             raise ValueError(
                 f"blocked engine: n_keys={self.n_keys} must be a multiple "
                 f"of block_rows={self.block_rows}")
+        if self.spill_blocks < 1:
+            raise ValueError(f"spill_blocks must be >= 1, "
+                             f"got {self.spill_blocks}")
 
 
 class ShardedKV:
@@ -176,9 +206,18 @@ class ShardedKV:
                                  "a :defer plan")
         else:
             if schedule is None:
-                schedule = DeferSchedule.fixed(
-                    commit_every or DEFAULT_COMMIT_EVERY,
-                    self._deferred_names)
+                if commit_every is None:
+                    commit_every = DEFAULT_COMMIT_EVERY
+                if commit_every < 1:
+                    # `commit_every or DEFAULT` would silently turn an
+                    # explicit 0 into the default — reject it loudly.
+                    raise ValueError(
+                        f"commit_every must be >= 1 (got {commit_every}); "
+                        f"a zero/negative interval has no commit ticks — "
+                        f"use plan=serving_plan(n, 'none') for a "
+                        f"synchronized store")
+                schedule = DeferSchedule.fixed(commit_every,
+                                               self._deferred_names)
             elif commit_every is not None:
                 raise ValueError("pass schedule= or commit_every=, not both")
             if tuple(schedule.level_names) != self._deferred_names:
@@ -196,30 +235,98 @@ class ShardedKV:
                     f"resident cache withholds unmerged mass from them; "
                     f"use serving_plan(n, 'all') or engine='kernel'")
 
+        self.partitioned = config.partitioned
+        self._overlap = bool(schedule is not None
+                             and getattr(schedule, "overlap", False))
+        if self._overlap and not config.partitioned:
+            raise ValueError(
+                "schedule.overlap=True: the overlapped (launch/land) commit "
+                "is the partitioned store's pipeline — set "
+                "KVConfig(partitioned=True) or drop overlap")
+        if config.partitioned:
+            if self.synchronized:
+                raise ValueError(
+                    "partitioned=True needs deferred commits (the "
+                    "partitioned table only settles at commit ticks); "
+                    "use a :defer plan")
+            if not self._fully_deferred:
+                raise ValueError(
+                    "partitioned=True needs a fully deferred plan: the "
+                    "partitioned pendings (ring/spill) only drain at "
+                    "commits, so an eager level would never settle; use "
+                    "serving_plan(n, 'all')")
+            if config.n_keys % n_shards != 0:
+                raise ValueError(
+                    f"partitioned=True: n_keys={config.n_keys} must be a "
+                    f"multiple of n_shards={n_shards} (each shard homes "
+                    f"n_keys/n_shards rows)")
+            if len(set(schedule.intervals)) > 1:
+                raise ValueError(
+                    f"partitioned=True commits all-or-nothing (one commit "
+                    f"tick settles the whole cascade), so the schedule "
+                    f"must be uniform; got nested intervals "
+                    f"{schedule.intervals}")
+            if self._overlap:
+                merge.check_overlap("ShardedKV(partitioned, overlap)")
+
         # -- device state (leading shard axis) ------------------------------
         S, R, D = n_shards, config.n_keys, config.cols
-        ident_row = merge.identity((R, D), config.dtype)
-        self.settled = jnp.broadcast_to(ident_row, (S, R, D))
-        self.pendings = tuple(
-            jnp.broadcast_to(ident_row, (S, R, D))
-            for _ in range(self.n_deferred))
+        if config.partitioned:
+            self.settled = jnp.broadcast_to(
+                merge.identity((R // S, D), config.dtype), (S, R // S, D))
+            self.pendings = ()
+        else:
+            ident_row = merge.identity((R, D), config.dtype)
+            self.settled = jnp.broadcast_to(ident_row, (S, R, D))
+            self.pendings = tuple(
+                jnp.broadcast_to(ident_row, (S, R, D))
+                for _ in range(self.n_deferred))
         self.cache = None
+        self.spill = None
         if config.engine == "blocked":
             c0 = blocked.init_cache(config.ways, config.block_rows, D,
                                     config.dtype)
             self.cache = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (S,) + x.shape), c0)
+            if config.partitioned:
+                s0 = blocked.init_spill(config.spill_blocks,
+                                        config.block_rows, D, config.dtype,
+                                        merge)
+                self.spill = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (S,) + x.shape), s0)
+        # kernel-engine partitioned pendings: a ring of raw updates sized
+        # max_period * batch — allocated at the first tick, when the fixed
+        # batch shape is first seen.
+        self.ring = None
+        self._ring_batch = None
+        self.inflight = None
+        self._land_pending = False
         self._t = 0
 
         # -- compiled-once per-shard programs -------------------------------
         self._tick_fns: dict[Any, Callable] = {}
         if self.synchronized:
             self._tick_fns["sync"] = self._make_sync_tick()
+            self._read_fn = self._make_read()
+        elif config.partitioned:
+            for land in ((False, True) if self._overlap else (False,)):
+                for full in (False, True):
+                    self._tick_fns[("p", full, land)] = \
+                        self._make_part_tick(full, land)
+            self._flush_fn = self._make_part_flush(land=False)
+            if self._overlap:
+                self._flush_land_fn = self._make_part_flush(land=True)
+            self._read_fns = {"plain": self._make_part_read("plain")}
+            if config.consistency == "read_your_writes":
+                self._read_fns["ryw"] = self._make_part_read("ryw")
+                if self._overlap:
+                    self._read_fns["ryw_inflight"] = \
+                        self._make_part_read("ryw_inflight")
         else:
             for due in range(self.n_deferred + 1):
                 self._tick_fns[due] = self._make_deferred_tick(due)
             self._flush_fn = self._make_flush()
-        self._read_fn = self._make_read()
+            self._read_fn = self._make_read()
 
     # ------------------------------------------------------------------
     # per-shard program builders (closures created once, see class doc)
@@ -335,6 +442,224 @@ class ShardedKV:
 
         return flush_fn
 
+    # -- partitioned-mode builders (module doc: partitioned) ------------
+
+    def _home_rows(self, agg: Array) -> Array:
+        """This shard's home rows of a full ``(n_keys, cols)`` aggregate:
+        global row ``r`` lives on shard ``r % S`` at local index
+        ``r // S``."""
+        S = self.n_shards
+        me = jax.lax.axis_index(self.axis_name)
+        return agg.reshape(self.config.n_keys // S, S,
+                           self.config.cols)[:, me, :]
+
+    def _ring_append(self, ring, keys: Array, vals: Array):
+        rk, rv, cur = ring
+        rk = jax.lax.dynamic_update_slice_in_dim(rk, keys, cur, axis=0)
+        rv = jax.lax.dynamic_update_slice_in_dim(rv, vals, cur, axis=0)
+        return rk, rv, cur + keys.shape[0]
+
+    def _ring_reset(self, ring):
+        rk, rv, cur = ring
+        return (jnp.full_like(rk, -1),
+                self.config.merge.identity(rv.shape, rv.dtype),
+                jnp.zeros_like(cur))
+
+    def _part_delta(self, ring) -> Array:
+        """The ring's buffered updates as a transient dense global delta
+        (unwritten slots hold key ``-1`` — scatter's ignore convention)."""
+        rk, rv, _ = ring
+        return self._scatter_into(self._identity_table(), rk, rv)
+
+    def _spill_scatter(self, cache, spill, keys: Array, vals: Array):
+        """One tick through the resident cache, evictions spilling into
+        the bounded buffer (same padding convention as
+        :meth:`_blocked_delta`)."""
+        cfg = self.config
+        ok = (keys >= 0) & (keys < cfg.n_keys)
+        ident_val = cfg.merge.identity((cfg.cols,), cfg.dtype)
+        safe = jnp.where(ok, keys, 0).astype(jnp.int32)
+        vals = jnp.where(ok[:, None], vals, ident_val)
+        return blocked.spill_scatter(cache, spill, safe, vals, cfg.merge)
+
+    def _part_drain_blocked(self, cache, spill):
+        """Commit-side drain: resident dirty ways + spilled blocks into a
+        transient dense global delta."""
+        merge = self.config.merge
+        cache, delta = blocked.flush(cache, self._identity_table(), merge)
+        spill, delta = blocked.spill_drain(spill, delta, merge)
+        return cache, spill, delta
+
+    def _make_part_tick(self, full: bool, land: bool):
+        merge, axis, plan = self.config.merge, self.axis_name, self.plan
+        overlap = self._overlap
+
+        if self.config.engine == "kernel" and not land:
+            def tick(settled, ring, keys, vals):
+                ring = self._ring_append(ring, keys, vals)
+                if not full:
+                    return settled, ring
+                delta = self._part_delta(ring)
+                ring = self._ring_reset(ring)
+                if overlap:
+                    return settled, ring, ccache.launch_inflight(
+                        delta, axis, merge, plan)
+                agg = ccache.settle_deferred(delta, axis, merge, plan)
+                return merge.apply(settled, self._home_rows(agg)), ring
+        elif self.config.engine == "kernel":
+            def tick(settled, ring, inflight, keys, vals):
+                ring = self._ring_append(ring, keys, vals)
+                # land the previous commit's launched aggregate: its top
+                # exchange overlaps this tick's scatter in one program
+                agg = ccache.settle_inflight(inflight, axis, merge, plan)
+                settled = merge.apply(settled, self._home_rows(agg))
+                if not full:
+                    return settled, ring
+                delta = self._part_delta(ring)
+                ring = self._ring_reset(ring)
+                return settled, ring, ccache.launch_inflight(
+                    delta, axis, merge, plan)
+        elif not land:
+            def tick(settled, cache, spill, keys, vals):
+                cache, spill = self._spill_scatter(cache, spill, keys, vals)
+                if not full:
+                    return settled, cache, spill
+                cache, spill, delta = self._part_drain_blocked(cache, spill)
+                if overlap:
+                    return settled, cache, spill, ccache.launch_inflight(
+                        delta, axis, merge, plan)
+                agg = ccache.settle_deferred(delta, axis, merge, plan)
+                return (merge.apply(settled, self._home_rows(agg)),
+                        cache, spill)
+        else:
+            def tick(settled, cache, spill, inflight, keys, vals):
+                cache, spill = self._spill_scatter(cache, spill, keys, vals)
+                agg = ccache.settle_inflight(inflight, axis, merge, plan)
+                settled = merge.apply(settled, self._home_rows(agg))
+                if not full:
+                    return settled, cache, spill
+                cache, spill, delta = self._part_drain_blocked(cache, spill)
+                return settled, cache, spill, ccache.launch_inflight(
+                    delta, axis, merge, plan)
+
+        return tick
+
+    def _make_part_flush(self, land: bool):
+        merge, axis, plan = self.config.merge, self.axis_name, self.plan
+
+        def settle_home(settled, delta):
+            agg = ccache.settle_deferred(delta, axis, merge, plan)
+            return merge.apply(settled, self._home_rows(agg))
+
+        if self.config.engine == "kernel" and not land:
+            def flush_fn(settled, ring):
+                settled = settle_home(settled, self._part_delta(ring))
+                return settled, self._ring_reset(ring)
+        elif self.config.engine == "kernel":
+            def flush_fn(settled, ring, inflight):
+                agg = ccache.settle_inflight(inflight, axis, merge, plan)
+                settled = merge.apply(settled, self._home_rows(agg))
+                settled = settle_home(settled, self._part_delta(ring))
+                return settled, self._ring_reset(ring)
+        elif not land:
+            def flush_fn(settled, cache, spill):
+                cache, spill, delta = self._part_drain_blocked(cache, spill)
+                return settle_home(settled, delta), cache, spill
+        else:
+            def flush_fn(settled, cache, spill, inflight):
+                agg = ccache.settle_inflight(inflight, axis, merge, plan)
+                settled = merge.apply(settled, self._home_rows(agg))
+                cache, spill, delta = self._part_drain_blocked(cache, spill)
+                return settle_home(settled, delta), cache, spill
+
+        return flush_fn
+
+    def _make_part_read(self, kind: str):
+        cfg = self.config
+        merge = cfg.merge
+        S, R, D = self.n_shards, cfg.n_keys, cfg.cols
+
+        def base_gather(settled, keys):
+            # routed reads: only keys homed here answer; off-home or
+            # invalid keys return the merge identity (route with
+            # BatchedFrontend, which shards traffic by key % n_shards)
+            me = jax.lax.axis_index(self.axis_name)
+            ok = (keys >= 0) & (keys < R) & (keys % S == me)
+            local = jnp.where(ok, keys // S, 0)
+            ident = merge.identity((D,), cfg.dtype)
+            return jnp.where(ok[:, None], settled[local], ident), ok
+
+        if kind == "plain":
+            def read(settled, keys):
+                return base_gather(settled, keys)[0]
+            return read
+
+        def ring_overlay(ring, keys, ok):
+            # the device's own buffered updates for each key, reduced with
+            # the merge's combine (a monoid, so lax.reduce applies)
+            rk, rv, _ = ring
+            match = ((rk[None, :] == keys[:, None])
+                     & ok[:, None] & (rk >= 0)[None, :])
+            ident = merge.identity((), rv.dtype)
+            masked = jnp.where(match[:, :, None], rv[None, :, :], ident)
+            return jax.lax.reduce(masked, ident,
+                                  lambda a, b: merge.combine(a, b), (1,))
+
+        def cache_overlay(cache, spill, keys, ok):
+            # c_read_row semantics over the table-less cache + spill: the
+            # resident way's delta(src, upd) plus any spilled mass
+            br = cfg.block_rows
+            safe = jnp.where(ok, keys, 0)
+            block, line = safe // br, safe % br
+            c_hits = cache.block_ids[None, :] == block[:, None]
+            c_hit = jnp.any(c_hits, axis=-1) & ok
+            way = jnp.argmax(c_hits, axis=-1)
+            res = merge.delta(cache.src_vals[way, line],
+                              cache.upd_vals[way, line])
+            ident = merge.identity(res.shape, res.dtype)
+            out = jnp.where(c_hit[:, None], res, ident)
+            s_hits = spill.block_ids[None, :] == block[:, None]
+            s_hit = jnp.any(s_hits, axis=-1) & ok
+            slot = jnp.argmax(s_hits, axis=-1)
+            return merge.combine(out, jnp.where(s_hit[:, None],
+                                                spill.vals[slot, line],
+                                                ident))
+
+        def inflight_overlay(base, inflight, keys, ok):
+            # launched-but-unlanded mass: includes this device's own
+            # writes (plus inner-group peers' — fresher, still monotone)
+            safe = jnp.where(ok, keys, 0)
+            ident = merge.identity((D,), inflight.dtype)
+            return merge.apply(base, jnp.where(ok[:, None], inflight[safe],
+                                               ident))
+
+        if kind == "ryw":
+            if cfg.engine == "kernel":
+                def read(settled, ring, keys):
+                    base, ok = base_gather(settled, keys)
+                    return merge.apply(base, ring_overlay(ring, keys, ok))
+            else:
+                def read(settled, cache, spill, keys):
+                    base, ok = base_gather(settled, keys)
+                    return merge.apply(base,
+                                       cache_overlay(cache, spill, keys, ok))
+            return read
+
+        if kind != "ryw_inflight":
+            raise ValueError(f"unknown partitioned read kind {kind!r}")
+        if cfg.engine == "kernel":
+            def read(settled, ring, inflight, keys):
+                base, ok = base_gather(settled, keys)
+                base = inflight_overlay(base, inflight, keys, ok)
+                return merge.apply(base, ring_overlay(ring, keys, ok))
+        else:
+            def read(settled, cache, spill, inflight, keys):
+                base, ok = base_gather(settled, keys)
+                base = inflight_overlay(base, inflight, keys, ok)
+                return merge.apply(base,
+                                   cache_overlay(cache, spill, keys, ok))
+        return read
+
     def _make_read(self):
         cfg = self.config
         merge = cfg.merge
@@ -397,6 +722,10 @@ class ShardedKV:
         (< 0 = padding), ``vals`` [S, B, cols].  Commit policy rides the
         schedule; non-commit ticks of a fully deferred plan run zero
         collectives."""
+        if not self.synchronized and hasattr(self.schedule, "observe"):
+            # adaptive schedule: feed the real (non-padding) ingest count
+            # into the EMA before the boundary re-solve can fire
+            self.schedule.observe(int((np.asarray(keys) >= 0).sum()))
         keys = jnp.asarray(keys, jnp.int32)
         vals = jnp.asarray(vals, self.config.dtype)
         if self.synchronized:
@@ -404,6 +733,8 @@ class ShardedKV:
                                      keys, vals, donate=(0,))
             self._t += 1
             return
+        if self.partitioned:
+            return self._tick_partitioned(keys, vals)
         self._t += 1
         due = self.schedule.due_count(self._t)
         fn = self._tick_fns[due]
@@ -415,12 +746,78 @@ class ShardedKV:
                 fn, self.settled, self.pendings, self.cache, keys, vals,
                 donate=(0, 1, 2))
 
+    def _ensure_ring(self, shape) -> None:
+        S, B = shape
+        if self.ring is None:
+            cfg = self.config
+            C = self.schedule.max_period * B
+            self.ring = (jnp.full((S, C), -1, jnp.int32),
+                         cfg.merge.identity((S, C, cfg.cols), cfg.dtype),
+                         jnp.zeros((S,), jnp.int32))
+            self._ring_batch = B
+        elif B != self._ring_batch:
+            raise ValueError(
+                f"partitioned store compiles one fixed tick shape: the "
+                f"pending ring was sized for batch {self._ring_batch}, "
+                f"got {B}")
+
+    def _check_spill_overflow(self) -> None:
+        n = int(np.asarray(self.spill.n_overflow).sum())
+        if n:
+            raise RuntimeError(
+                f"spill buffer overflowed {n} eviction(s) — pending mass "
+                f"was dropped; raise KVConfig.spill_blocks (currently "
+                f"{self.config.spill_blocks}) above the distinct blocks a "
+                f"commit cycle can evict")
+
+    def _tick_partitioned(self, keys: Array, vals: Array) -> None:
+        kernel = self.config.engine == "kernel"
+        if kernel:
+            self._ensure_ring(keys.shape)
+        self._t += 1
+        due = self.schedule.due_count(self._t)
+        if due not in (0, self.n_deferred):  # guarded at init (uniform)
+            raise RuntimeError(f"partitioned commit must be all-or-nothing, "
+                               f"got due={due}")
+        full = due == self.n_deferred
+        land = self._land_pending
+        fn = self._tick_fns[("p", full, land)]
+        if kernel:
+            extra = (self.inflight,) if land else ()
+            out = self._run(fn, self.settled, self.ring, *extra, keys, vals,
+                            donate=tuple(range(2 + len(extra))))
+            if full and self._overlap:
+                self.settled, self.ring, self.inflight = out
+                self._land_pending = True
+            else:
+                self.settled, self.ring = out
+                if land:
+                    self.inflight = None
+                    self._land_pending = False
+        else:
+            extra = (self.inflight,) if land else ()
+            out = self._run(fn, self.settled, self.cache, self.spill,
+                            *extra, keys, vals,
+                            donate=tuple(range(3 + len(extra))))
+            if full and self._overlap:
+                self.settled, self.cache, self.spill, self.inflight = out
+                self._land_pending = True
+            else:
+                self.settled, self.cache, self.spill = out
+                if land:
+                    self.inflight = None
+                    self._land_pending = False
+            if full:
+                self._check_spill_overflow()
+
     def read(self, keys) -> Array:
         """Serve one fixed-shape batch of gets: ``keys`` [S, B] -> [S, B,
         cols].  Zero collectives either way: ``eventual`` reads the last
         settled table; ``read_your_writes`` overlays the device's own
         unmerged pendings (+ resident cache delta, blocked engine)."""
         keys = jnp.asarray(keys, jnp.int32)
+        if self.partitioned:
+            return self._read_partitioned(keys)
         if self.synchronized or self.config.consistency == "eventual":
             return self.spmd(self._read_fn, self.settled, keys)
         if self.config.engine == "kernel":
@@ -428,6 +825,20 @@ class ShardedKV:
                              keys)
         return self.spmd(self._read_fn, self.settled, self.pendings,
                          self.cache, keys)
+
+    def _read_partitioned(self, keys: Array) -> Array:
+        kernel = self.config.engine == "kernel"
+        ryw = self.config.consistency == "read_your_writes"
+        if not ryw or (kernel and self.ring is None):
+            # before the first tick there is nothing pending anywhere —
+            # the settled-only read IS read-your-writes
+            return self.spmd(self._read_fns["plain"], self.settled, keys)
+        pending = (self.ring,) if kernel else (self.cache, self.spill)
+        if self._land_pending:
+            return self.spmd(self._read_fns["ryw_inflight"], self.settled,
+                             *pending, self.inflight, keys)
+        return self.spmd(self._read_fns["ryw"], self.settled, *pending,
+                         keys)
 
     def flush(self) -> None:
         """Commit everything outstanding (pendings + resident cache).
@@ -437,7 +848,9 @@ class ShardedKV:
         Resets the schedule phase (a flush ends the current cycle)."""
         if self.synchronized:
             return
-        if self.config.engine == "kernel":
+        if self.partitioned:
+            self._flush_partitioned()
+        elif self.config.engine == "kernel":
             self.settled, self.pendings = self._run(
                 self._flush_fn, self.settled, self.pendings, donate=(0, 1))
         else:
@@ -445,17 +858,67 @@ class ShardedKV:
                 self._flush_fn, self.settled, self.pendings, self.cache,
                 donate=(0, 1, 2))
         self._t = 0
+        if hasattr(self.schedule, "reset"):
+            self.schedule.reset()
+
+    def _flush_partitioned(self) -> None:
+        kernel = self.config.engine == "kernel"
+        land = self._land_pending
+        if kernel and self.ring is None:
+            return  # nothing ever ingested (land implies a prior tick)
+        fn = self._flush_land_fn if land else self._flush_fn
+        extra = (self.inflight,) if land else ()
+        if kernel:
+            self.settled, self.ring = self._run(
+                fn, self.settled, self.ring, *extra,
+                donate=tuple(range(2 + len(extra))))
+        else:
+            self.settled, self.cache, self.spill = self._run(
+                fn, self.settled, self.cache, self.spill, *extra,
+                donate=tuple(range(3 + len(extra))))
+            self._check_spill_overflow()
+        self.inflight = None
+        self._land_pending = False
 
     def table(self) -> np.ndarray:
-        """The settled table (any shard's copy — it is replicated)."""
-        return np.asarray(self.settled[0])
+        """The settled table.  Replicated mode returns any shard's copy;
+        partitioned mode reassembles the home-sharded rows
+        (``out[s::S] = shard s``)."""
+        if not self.partitioned:
+            return np.asarray(self.settled[0])
+        parts = np.asarray(self.settled)            # (S, R // S, D)
+        out = np.empty((self.config.n_keys, self.config.cols), parts.dtype)
+        for s in range(self.n_shards):
+            out[s::self.n_shards] = parts[s]
+        return out
+
+    def resident_state_bytes(self) -> int:
+        """Per-device bytes of long-lived store state: the settled shard
+        plus the pending machinery (dense pendings, ring, cache, spill, an
+        in-flight launched aggregate).  Excludes the transient dense delta
+        a commit tick materializes and frees within the tick."""
+        leaves = [self.settled, *self.pendings]
+        for extra in (self.cache, self.spill, self.ring, self.inflight):
+            if extra is not None:
+                leaves.extend(jax.tree.leaves(extra))
+        return sum(x.nbytes for x in leaves) // self.n_shards
 
     def counters(self) -> dict:
         out = {"ticks": self._t, "engine": self.config.engine,
                "consistency": self.config.consistency,
-               "synchronized": self.synchronized}
+               "synchronized": self.synchronized,
+               "partitioned": self.partitioned}
         if not self.synchronized:
             out["schedule"] = self.schedule.as_dict()
+        if self.partitioned:
+            out["resident_state_bytes"] = self.resident_state_bytes()
+            if self._overlap:
+                out["overlap"] = True
+                out["land_pending"] = self._land_pending
+        if self.spill is not None:
+            out["spills"] = int(np.asarray(self.spill.n_spills).sum())
+            out["spill_overflow"] = int(
+                np.asarray(self.spill.n_overflow).sum())
         if self.cache is not None:
             for k, leaf in (("evict_merges", self.cache.n_evict_merges),
                             ("silent_evicts", self.cache.n_silent_evicts),
@@ -468,12 +931,41 @@ class ShardedKV:
     # introspection for benchmarks (HLO wire-vector walks)
     # ------------------------------------------------------------------
 
-    def raw_tick_fn(self, due: Optional[int] = None) -> Callable:
+    @property
+    def supported_dues(self) -> tuple:
+        """The due counts :meth:`raw_tick_fn` has programs for: one sync
+        program, all-or-nothing for a partitioned store, every prefix
+        otherwise."""
+        if self.synchronized:
+            return ("sync",)
+        if self.partitioned:
+            return (0, self.n_deferred)
+        return tuple(range(self.n_deferred + 1))
+
+    def _check_land(self, land: bool) -> None:
+        if land and not (self.partitioned and self._overlap):
+            raise ValueError("land=True is the overlapped partitioned "
+                             "store's landing tick — needs "
+                             "partitioned=True and schedule.overlap")
+
+    def raw_tick_fn(self, due: Optional[int] = None,
+                    land: bool = False) -> Callable:
         """The per-shard tick program, for lowering under ``shard_map``
         (``hlo_cost`` wire-vector walks).  ``due=None`` on a synchronized
-        store returns the sync tick."""
+        store returns the sync tick; on a partitioned store, the full
+        commit.  ``land=True`` selects the overlapped store's landing
+        variant (the tick that settles the in-flight aggregate)."""
+        self._check_land(land)
         if self.synchronized:
             return self._tick_fns["sync"]
+        if self.partitioned:
+            if due is None:
+                due = self.n_deferred
+            if due not in self.supported_dues:
+                raise ValueError(f"partitioned store commits all-or-"
+                                 f"nothing: due must be one of "
+                                 f"{self.supported_dues}, got {due}")
+            return self._tick_fns[("p", due == self.n_deferred, land)]
         if due is None:
             raise ValueError("deferred store: pass due (0..n_deferred)")
         return self._tick_fns[due]
@@ -484,14 +976,34 @@ class ShardedKV:
             raise ValueError("synchronized store has nothing to flush")
         return self._flush_fn
 
-    def tick_arg_specs(self, batch: int) -> tuple:
+    def tick_arg_specs(self, batch: int, land: bool = False) -> tuple:
         """Per-shard abstract args of :meth:`raw_tick_fn` for a ``batch``-
         update tick — what the static verifier traces/lowers the tick
         against (``jax.ShapeDtypeStruct`` leaves, no device state)."""
+        self._check_land(land)
         cfg = self.config
-        table = jax.ShapeDtypeStruct((cfg.n_keys, cfg.cols), self.settled.dtype)
         keys = jax.ShapeDtypeStruct((batch,), jnp.int32)
         vals = jax.ShapeDtypeStruct((batch, cfg.cols), self.settled.dtype)
+        if self.partitioned:
+            settled = jax.ShapeDtypeStruct(
+                (cfg.n_keys // self.n_shards, cfg.cols), self.settled.dtype)
+            inflight = ((jax.ShapeDtypeStruct((cfg.n_keys, cfg.cols),
+                                              self.settled.dtype),)
+                        if land else ())
+            if cfg.engine == "kernel":
+                C = self.schedule.max_period * batch
+                ring = (jax.ShapeDtypeStruct((C,), jnp.int32),
+                        jax.ShapeDtypeStruct((C, cfg.cols),
+                                             self.settled.dtype),
+                        jax.ShapeDtypeStruct((), jnp.int32))
+                return (settled, ring) + inflight + (keys, vals)
+            state = tuple(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:],
+                                                            x.dtype), st)
+                for st in (self.cache, self.spill))
+            return (settled,) + state + inflight + (keys, vals)
+        table = jax.ShapeDtypeStruct((cfg.n_keys, cfg.cols),
+                                     self.settled.dtype)
         if self.synchronized:
             return (table, keys, vals)
         pendings = tuple(table for _ in range(self.n_deferred))
@@ -503,19 +1015,41 @@ class ShardedKV:
 
     @property
     def donate_argnums(self) -> tuple:
-        """The state arg positions :meth:`tick` donates (in-place update
-        buffers the compiled module must alias, not copy)."""
+        """The state arg positions a plain (non-landing) :meth:`tick`
+        donates (in-place update buffers the compiled module must alias,
+        not copy).  Landing ticks donate one extra position (the in-flight
+        aggregate, right after these)."""
         if self.synchronized:
             return (0,)
+        if self.partitioned:
+            return (0, 1) if self.config.engine == "kernel" else (0, 1, 2)
         return (0, 1) if self.config.engine == "kernel" else (0, 1, 2)
 
-    def scheduled_manifest(self, due: Optional[int] = None) -> list:
-        """The collective schedule a ``due``-commit tick is licensed to
-        emit (``ccache.program_manifest``); ``due=None`` = full commit."""
+    def scheduled_manifest(self, due: Optional[int] = None,
+                           land: bool = False) -> list:
+        """The collective schedule a tick is licensed to emit
+        (``ccache.program_manifest``); ``due=None`` = full commit.  For an
+        overlapped partitioned store the halves split per
+        ``ccache.overlap_program_manifest``: a full-commit tick emits the
+        launch half, the landing tick the withheld top exchange (a
+        landing tick that is itself a full commit emits both, land
+        first)."""
+        self._check_land(land)
         if self.synchronized:
             return ccache.collective_manifest(self.plan, self.n_shards,
                                               merge_fn=self.config.merge)
         if due is None:
             due = self.n_deferred
+        if self.partitioned and self._overlap:
+            out = []
+            if land:
+                out += ccache.overlap_program_manifest(
+                    self.plan, self.n_shards, "land",
+                    merge_fn=self.config.merge)
+            if due == self.n_deferred:
+                out += ccache.overlap_program_manifest(
+                    self.plan, self.n_shards, "launch",
+                    merge_fn=self.config.merge)
+            return out
         return ccache.program_manifest(self.plan, self.n_shards, due,
                                        merge_fn=self.config.merge)

@@ -270,6 +270,260 @@ def test_serving_plan_defer_knob():
 
 
 # ---------------------------------------------------------------------------
+# the partitioned settled table (routed reads, spilled pendings)
+# ---------------------------------------------------------------------------
+
+def _part_cfg(engine, **kw):
+    return KVConfig(n_keys=32, cols=2, engine=engine, partitioned=True,
+                    ways=4, block_rows=4, spill_blocks=8, **kw)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       engine=st.sampled_from(["kernel", "blocked"]),
+       commit_every=st.sampled_from([1, 3, 8]))
+@settings(max_examples=8, deadline=None)
+def test_property_partitioned_flush_equals_oracle_bitwise(seed, engine,
+                                                          commit_every):
+    """The partitioned store (home-sharded settled rows, ring/spill
+    pendings) lands on the same table as the replicated store and the
+    numpy oracle, bitwise — partitioning changes placement, not state."""
+    S, R, D, B, T = 4, 32, 2, 8, 7
+    keys, vals = _stream(seed, T, S, B, R, D)
+    part = ShardedKV(_part_cfg(engine), S, _spmd, commit_every=commit_every)
+    repl = ShardedKV(KVConfig(n_keys=R, cols=D, engine=engine), S, _spmd,
+                     commit_every=commit_every)
+    for t in range(T):
+        part.tick(keys[t], vals[t])
+        repl.tick(keys[t], vals[t])
+    part.flush()
+    repl.flush()
+    want = _oracle(keys, vals, R, D)
+    assert np.array_equal(part.table().astype(np.int64), want)
+    assert np.array_equal(repl.table().astype(np.int64), want)
+
+
+@pytest.mark.parametrize("engine", ["kernel", "blocked"])
+def test_partitioned_overlap_commit_bitwise(engine):
+    """The launch/land split (top exchange lands one tick late) withholds
+    mass only transiently: flush() still equals the oracle bitwise."""
+    S, R, D, B, T = 4, 32, 2, 8, 10
+    keys, vals = _stream(11, T, S, B, R, D)
+    sched = DeferSchedule.fixed(3, ("chip", "pod"), overlap=True)
+    kv = ShardedKV(_part_cfg(engine), S, _spmd, schedule=sched)
+    for t in range(T):
+        kv.tick(keys[t], vals[t])
+        if kv._land_pending:
+            # the settled table runs (at most) one tick stale during the
+            # overlap window; it must never run AHEAD of the oracle
+            part_sum = kv.table().astype(np.int64).sum()
+            full_sum = _oracle(keys[:t + 1], vals[:t + 1], R, D).sum()
+            assert part_sum <= full_sum
+    kv.flush()
+    assert not kv._land_pending and kv.inflight is None
+    assert np.array_equal(kv.table().astype(np.int64),
+                          _oracle(keys, vals, R, D))
+
+
+def test_partitioned_adaptive_schedule_bitwise():
+    from repro.core.defer_schedule import AdaptiveDeferSchedule
+    S, R, D, B, T = 4, 32, 2, 8, 20
+    keys, vals = _stream(5, T, S, B, R, D)
+    sched = AdaptiveDeferSchedule(serving_plan(S), [1e3, 4e3],
+                                  base_compute_s=1e-6, per_update_s=1e-7,
+                                  k_max=8)
+    kv = ShardedKV(KVConfig(n_keys=R, cols=D, partitioned=True), S, _spmd,
+                   schedule=sched)
+    for t in range(T):
+        kv.tick(keys[t], vals[t])
+    kv.flush()
+    assert np.array_equal(kv.table().astype(np.int64),
+                          _oracle(keys, vals, R, D))
+    assert kv.counters()["schedule"]["adaptive"]["n_resolves"] >= 2
+
+
+@pytest.mark.parametrize("engine", ["kernel", "blocked"])
+def test_partitioned_read_your_writes_routed(engine):
+    """With traffic routed by key % S (the frontend's discipline), every
+    write to a key lives on its home shard, so a routed RYW read equals
+    the full running oracle at every tick — commits pending or not."""
+    S, R, D, B, T = 4, 32, 2, 8, 9
+    rng = np.random.default_rng(17)
+    kv = ShardedKV(_part_cfg(engine, consistency="read_your_writes"),
+                   S, _spmd, commit_every=3)
+    ref = np.zeros((R, D), np.int64)
+    rkeys = np.arange(R, dtype=np.int32).reshape(R // S, S).T  # homed rows
+    for t in range(T):
+        keys = np.full((S, B), -1, np.int32)
+        vals = np.zeros((S, B, D), np.int32)
+        for s in range(S):
+            for b in range(B - 1):
+                k = int(rng.integers(0, R // S)) * S + s
+                keys[s, b] = k
+                vals[s, b] = rng.integers(1, 9, size=D)
+                ref[k] += vals[s, b]
+        kv.tick(keys, vals)
+        out = np.asarray(kv.read(rkeys)).astype(np.int64)
+        got = np.zeros((R, D), np.int64)
+        for s in range(S):
+            got[rkeys[s]] = out[s]
+        assert np.array_equal(got, ref), f"tick {t}"
+    # off-home and invalid keys answer the merge identity, not garbage
+    off = np.asarray(kv.read(np.roll(rkeys, 1, axis=0)))
+    assert (off == 0).all()
+
+
+def test_partitioned_noncommit_tick_traces_zero_collectives():
+    """CC010/CC020 at the source: the partitioned due=0 tick program
+    contains no collective equations at all."""
+    from repro.analysis.jaxpr import check_noncommit_region
+    for engine in ("kernel", "blocked"):
+        kv = ShardedKV(_part_cfg(engine), 4, _spmd, commit_every=4)
+        diags = check_noncommit_region(kv.raw_tick_fn(0), AXIS, 4,
+                                       kv.tick_arg_specs(8),
+                                       site=f"part[{engine}] due=0")
+        assert not diags, diags
+    assert kv.supported_dues == (0, kv.n_deferred)
+
+
+def test_partitioned_resident_footprint_bounded():
+    """The point of the tentpole: per-device resident bytes stop scaling
+    with n_keys * (1 + n_deferred) and drop >= 4x vs the replicated
+    store at the same shapes."""
+    S, R, D, B = 4, 1024, 2, 8
+    repl = ShardedKV(KVConfig(n_keys=R, cols=D), S, _spmd, commit_every=8)
+    part = ShardedKV(KVConfig(n_keys=R, cols=D, partitioned=True), S,
+                     _spmd, commit_every=8)
+    keys, vals = _stream(0, 1, S, B, R, D)
+    repl.tick(keys[0], vals[0])
+    part.tick(keys[0], vals[0])  # allocates the ring
+    assert repl.resident_state_bytes() >= 4 * part.resident_state_bytes()
+
+
+def test_partitioned_spill_overflow_raises_loudly():
+    """Dropped evictions must never be silent: a spill buffer too small
+    for the traffic raises at the commit that detects it."""
+    S, B = 4, 8
+    cfg = KVConfig(n_keys=64, cols=1, engine="blocked", partitioned=True,
+                   ways=2, block_rows=4, spill_blocks=1)
+    kv = ShardedKV(cfg, S, _spmd, commit_every=4)
+    rng = np.random.default_rng(0)
+    with pytest.raises(RuntimeError, match="spill"):
+        for t in range(8):  # many distinct blocks -> constant evictions
+            keys = rng.permutation(64)[:S * B].reshape(S, B).astype(np.int32)
+            kv.tick(keys, np.ones((S, B, 1), np.int32))
+
+
+def test_partitioned_scheduled_manifests():
+    """Non-commit ticks are licensed to emit nothing; the overlapped
+    halves partition the full-commit manifest exactly."""
+    kv = ShardedKV(_part_cfg("kernel"), 8, _spmd, commit_every=4)
+    assert kv.scheduled_manifest(0) == []
+    full = kv.scheduled_manifest()
+    assert [m.name for m in full] == list(kv._deferred_names)
+
+    ov = ShardedKV(_part_cfg("kernel"), 8, _spmd,
+                   schedule=DeferSchedule.fixed(
+                       4, kv._deferred_names, overlap=True))
+    launch = ov.scheduled_manifest(ov.n_deferred)
+    land = ov.scheduled_manifest(0, land=True)
+    assert [m.name for m in launch + land] == [m.name for m in full]
+    assert ov.scheduled_manifest(0) == []
+    both = ov.scheduled_manifest(ov.n_deferred, land=True)
+    assert len(both) == len(full)
+    with pytest.raises(ValueError, match="land"):
+        kv.scheduled_manifest(0, land=True)
+
+
+def test_partitioned_validation():
+    plain = KVConfig(n_keys=32, cols=1)
+    with pytest.raises(ValueError, match="spill_blocks"):
+        KVConfig(n_keys=32, spill_blocks=0)
+    # rows must divide over the mesh
+    with pytest.raises(ValueError, match="multiple"):
+        ShardedKV(KVConfig(n_keys=30, partitioned=True), 4, _spmd)
+    # partitioned table only settles at commits: needs deferred plans
+    with pytest.raises(ValueError, match="deferred"):
+        ShardedKV(KVConfig(n_keys=32, partitioned=True), 4, _spmd,
+                  plan=serving_plan(4, "none"))
+    with pytest.raises(ValueError, match="fully deferred"):
+        ShardedKV(KVConfig(n_keys=32, partitioned=True), 8, _spmd,
+                  plan=serving_plan(8, "top"))
+    # all-or-nothing commits: nested intervals cannot partially settle
+    with pytest.raises(ValueError, match="uniform"):
+        ShardedKV(KVConfig(n_keys=32, partitioned=True), 4, _spmd,
+                  schedule=DeferSchedule(level_names=("chip", "pod"),
+                                         intervals=(2, 4)))
+    # the overlapped pipeline exists only for the partitioned store
+    with pytest.raises(ValueError, match="partitioned"):
+        ShardedKV(plain, 4, _spmd,
+                  schedule=DeferSchedule.fixed(2, ("chip", "pod"),
+                                               overlap=True))
+    # one compiled tick shape: the ring is sized at the first batch
+    kv = ShardedKV(KVConfig(n_keys=32, partitioned=True), 4, _spmd,
+                   commit_every=2)
+    kv.tick(np.full((4, 8), -1, np.int32), np.zeros((4, 8, 1), np.int32))
+    with pytest.raises(ValueError, match="fixed tick shape"):
+        kv.tick(np.full((4, 16), -1, np.int32),
+                np.zeros((4, 16, 1), np.int32))
+
+
+def test_commit_every_zero_raises():
+    """Regression: ``commit_every=0`` used to fall through ``or`` into the
+    silent default of 8 — it must be rejected loudly instead."""
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="commit_every"):
+            ShardedKV(KVConfig(n_keys=32), 4, _spmd, commit_every=bad)
+
+
+# ---------------------------------------------------------------------------
+# frontend: bounded drain + random interleavings vs a sequential oracle
+# ---------------------------------------------------------------------------
+
+def test_frontend_bounded_drain_raises_on_backlog():
+    """Regression: ``drain(max_steps=...)`` used to return silently with
+    gets still queued; now it raises DrainBacklog carrying the partial
+    results and leftover count."""
+    from repro.serve import DrainBacklog
+    fe = _frontend(slots=4)
+    key = 5
+    for _ in range(10):
+        fe.add(key, 1)
+    rid = fe.get(key)
+    with pytest.raises(DrainBacklog) as ei:
+        fe.drain(max_steps=1)      # 4 of 11 queued entries served
+    assert ei.value.backlog == 7 and ei.value.results == {}
+    out = fe.drain()               # unbounded drain finishes the job
+    assert int(out[rid][0]) == 10 and fe.backlog == 0
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_frontend_random_trace_vs_sequential_oracle(seed):
+    """Random interleaved add/get traffic, deliberately overflowing the
+    per-tick slots: every get's answer equals a sequential per-key oracle
+    that applies requests in program order (per shard, gets never overtake
+    earlier adds)."""
+    rng = np.random.default_rng(seed)
+    S, R = 4, 64
+    fe = _frontend(slots=2, S=S, R=R)  # tiny slots: constant overflow
+    expect = {}
+    running = np.zeros(R, np.int64)
+    for _ in range(rng.integers(20, 60)):
+        key = int(rng.integers(0, R))
+        if rng.random() < 0.6:
+            v = int(rng.integers(1, 9))
+            fe.add(key, v)
+            running[key] += v
+        else:
+            expect[fe.get(key)] = running[key]
+    out = fe.drain()
+    assert fe.backlog == 0
+    assert set(out) == set(expect)
+    for rid, want in expect.items():
+        assert int(out[rid][0]) == want, rid
+
+
+# ---------------------------------------------------------------------------
 # acceptance configuration: real forced-8-device mesh
 # ---------------------------------------------------------------------------
 
