@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 gate, four stages:
+# Tier-1 gate, five stages:
 #
 # 1. fast tests — the offline suite minus the slow-marked subprocess tests;
 # 2. slow tests — the subprocess CLI / multi-device end-to-end tests, run
@@ -33,7 +33,13 @@
 #        stream against the checked-in benchmarks/baseline.json, so perf
 #        regressions in the gated metrics FAIL CI instead of only
 #        printing, and seeds bounds for newly-added cells (regenerate
-#        with --write after an intentional perf change).
+#        with --write after an intentional perf change);
+# 5. fault-tolerance gate — the chaos acceptance suite
+#    (docs/fault_tolerance.md): preemption/kill sweeps over the integer
+#    deferred cascade recovered bitwise, the volatile-spec/CC040 audit,
+#    an elastic restore onto a different merge topology with zero mass
+#    loss, KV journal+snapshot crash recovery onto 2x shards, and a
+#    real-model deferred run killed mid-cycle on a forced 8-device mesh.
 #
 # The benchmark stream is tagged JSON records (benchmarks/records.py), so
 # stray log lines cannot poison either gate.
@@ -56,3 +62,7 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
     --only fig6,hier,fabric,apps_sharded,kv_gups \
     | python scripts/check_level_costs.py \
     | python scripts/check_baseline.py --write-new benchmarks/baseline.json
+
+echo "=== stage 5: fault-tolerance gate ==="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python examples/fault_tolerant_train.py --chaos --quick

@@ -14,6 +14,8 @@ canaries.
 """
 
 from repro.analysis.diagnostics import CATALOG, Diagnostic, Report
+from repro.analysis.durability import (check_checkpoint_coverage,
+                                       check_step_durability)
 from repro.analysis.jaxpr import (audit_plan, audit_stages,
                                   check_kv_tick_taint,
                                   check_noncommit_region)
@@ -25,6 +27,7 @@ from repro.analysis.traits import certify_merge_fn
 __all__ = [
     "CATALOG", "Diagnostic", "Report",
     "certify_merge_fn",
+    "check_checkpoint_coverage", "check_step_durability",
     "audit_plan", "audit_stages",
     "check_noncommit_region", "check_kv_tick_taint",
     "check_noncommit_record", "check_noncommit_walk",

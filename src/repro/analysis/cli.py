@@ -457,7 +457,26 @@ def fixture_checks() -> list[tuple[str, str, Callable[[], list[Diagnostic]]]]:
          lambda: placement.check_donation(_DONATION_HLO, {0, 1},
                                           "fixture:donation")),
         ("records:duplicate_key", "CC030", records_fixture),
+        ("durability:defer_not_checkpointed", "CC040", durability_fixture),
     ]
+
+
+def durability_fixture() -> list[Diagnostic]:
+    """A driver that checkpoints params/opt + only the INNERMOST pending
+    level of a 2-level overlapped cascade: the outer pending and the
+    in-flight launch are volatile-only — restore would drop their mass."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.durability import check_checkpoint_coverage
+    from repro.checkpoint import defer_state_spec
+
+    S = jax.ShapeDtypeStruct
+    params = {"w": S((4,), jnp.int32)}
+    spec = defer_state_spec(params, n_levels=2, dp=8, overlap=True)
+    saved = {"params": params, "opt": {},
+             "defer": {"t": spec["t"], "pending": (spec["pending"][0],)}}
+    return check_checkpoint_coverage("fixture:defer_ckpt", spec, saved)
 
 
 def run_fixtures() -> list[dict]:
@@ -477,6 +496,31 @@ def run_fixtures() -> list[dict]:
 # ---------------------------------------------------------------------------
 
 
+def sweep_durability(report: Report) -> None:
+    """CC040 over representative deferred train steps: the declared
+    volatile spec (``volatile_spec``) must cover the REAL defer state the
+    step initializes — drift between the two would let a checkpoint pass
+    the lint while dropping mass at restore."""
+    from repro.analysis.durability import check_step_durability
+    from repro.core import ccache
+    from repro.core.defer_schedule import DeferSchedule
+    from repro.core.merge_plan import MergePlan
+    from repro.runtime.chaos import ToyDeferredStep
+
+    cases = [("chip:2,host:2:defer,pod:2:defer", (1, 2), 8, False),
+             ("chip:2,host:2:defer,pod:2:defer", (2, 4), 8, True),
+             ("chip:4,pod:2:defer", (4,), 8, False)]
+    for spec, intervals, dp, overlap in cases:
+        plan = MergePlan.parse(spec)
+        names = tuple(s.name for s in ccache.deferred_stages_of(plan, dp))
+        sched = DeferSchedule(names, intervals, overlap=overlap)
+        step = ToyDeferredStep(plan, sched, dp, width=4)
+        site = (f"durability:{spec}@dp={dp}"
+                + (",overlap" if overlap else ""))
+        report.mark_checked(site)
+        report.extend(check_step_durability(site, step, step.init_params()))
+
+
 def build_report(suppressions=(), serve: bool = True) -> Report:
     report = Report(suppressions)
     _log("trait certification sweep (standard merges)")
@@ -485,6 +529,8 @@ def build_report(suppressions=(), serve: bool = True) -> Report:
     sweep_configs(report)
     _log("app superstep + plan lint")
     sweep_apps(report)
+    _log("defer-state checkpoint coverage (CC040)")
+    sweep_durability(report)
     if serve:
         _log(f"serve sweep on the forced {_SERVE_SHARDS}-way host mesh "
              f"(subprocess)")

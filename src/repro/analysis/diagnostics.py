@@ -46,6 +46,8 @@ CATALOG = {
              "manifest",
     "CC022": "donated buffer compiled to a copy instead of an alias",
     "CC030": "duplicate benchmark record key in one run",
+    "CC040": "volatile defer state not covered by the checkpoint tree "
+             "(pending mass would be dropped on restore)",
 }
 
 

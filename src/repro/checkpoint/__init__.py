@@ -1,6 +1,15 @@
 from repro.checkpoint.checkpoint import (
     latest_step,
+    load_raw,
     restore,
     restore_resharded,
     save,
+    tree_keys,
+)
+from repro.checkpoint.defer_state import (
+    defer_manifest,
+    defer_state_spec,
+    manifests_compatible,
+    plan_fingerprint,
+    schedule_fingerprint,
 )

@@ -40,6 +40,45 @@ def _flatten_with_paths(tree: PyTree) -> list[tuple[str, Any]]:
     return out
 
 
+def tree_keys(tree: PyTree) -> list[str]:
+    """The flattened ``"/"``-joined leaf paths of ``tree`` — the key space a
+    checkpoint of it stores under. The durability lint
+    (``repro.analysis.durability``) compares these sets to prove a volatile
+    state spec is covered by what a driver actually saves."""
+    return [k for k, _ in _flatten_with_paths(tree)]
+
+
+def load_raw(ckpt_dir: str, step: Optional[int] = None
+             ) -> tuple[dict, dict]:
+    """Load a checkpoint WITHOUT a ``like`` structure.
+
+    Returns ``(leaves, manifest)`` where ``leaves`` maps each flattened key
+    path to its numpy array (true dtype restored). This is the elastic
+    restore path's entry point: the saved defer/pending trees may have a
+    different structure than the current run's (different mesh, different
+    plan), so they are fetched by key and settled host-side instead of being
+    unflattened into a ``like``.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = {e["key"]: e["dtype"] for e in manifest["keys"]}
+    import ml_dtypes
+    leaves = {}
+    for k in data.files:
+        arr = data[k]
+        want = dtypes.get(k, str(arr.dtype))
+        if want != str(arr.dtype):
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want)))
+        leaves[k] = arr
+    return leaves, manifest
+
+
 def save(ckpt_dir: str, step: int, tree: PyTree,
          extras: Optional[dict] = None) -> str:
     """Two-phase-commit save. Returns the final checkpoint path."""

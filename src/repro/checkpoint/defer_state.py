@@ -1,0 +1,135 @@
+"""Durable identity of deferred-commit state: fingerprints + tree specs.
+
+The pending cascade (``state["defer"]``) and the serving store's volatile
+state are only meaningful relative to the compiled :class:`MergePlan` and
+the :class:`DeferSchedule` that produced them: a ``(dp, ...)``-leading
+pending buffer restored under a different rank count, level geometry, or
+commit cadence would be silently misinterpreted (wrong replication units,
+wrong settle scale). Checkpoints therefore record a *durability manifest* —
+content fingerprints of the plan and schedule plus the geometry the
+host-side settle needs (per-level strides, dp, period, settle mode) — and
+restore validates it: a match restores verbatim; a mismatch routes through
+``repro.runtime.elastic`` (settle the outstanding mass, re-solve, reshard).
+
+Everything here is pure host-side metadata: no mesh, no device arrays.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _digest(obj: dict) -> str:
+    return hashlib.sha256(
+        json.dumps(obj, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def plan_fingerprint(plan, axis_size: int, merge_name: Optional[str] = None
+                     ) -> str:
+    """Content fingerprint of a MergePlan *as compiled* for ``axis_size``
+    ranks. Two plans with the same fingerprint produce pendings with
+    identical replication geometry, so their defer state is exchangeable."""
+    desc = {
+        "axis_size": int(axis_size),
+        "axis_name": str(getattr(plan, "axis_name", "")),
+        "lane_parallel": bool(getattr(plan, "lane_parallel", False)),
+        "merge": merge_name,
+        "levels": [
+            [lv.name, int(lv.size), str(lv.transport),
+             str(getattr(lv, "combine_mode", "")), bool(lv.compress),
+             bool(lv.defer)]
+            for lv in plan.levels
+        ],
+    }
+    return _digest(desc)
+
+
+def schedule_fingerprint(schedule) -> str:
+    """Content fingerprint of a commit schedule.
+
+    Fixed :class:`DeferSchedule` instances hash their intervals; an
+    :class:`AdaptiveDeferSchedule` hashes its *envelope* (level names,
+    overlap, k bounds) because the solved intervals drift with load — two
+    adaptive schedules with the same envelope produce interchangeable state
+    (their pendings always drain within ``max_period`` ticks either way).
+    """
+    desc = {
+        "level_names": list(schedule.level_names),
+        "overlap": bool(getattr(schedule, "overlap", False)),
+    }
+    if hasattr(schedule, "_k_min"):  # AdaptiveDeferSchedule envelope
+        desc["adaptive"] = [int(schedule._k_min), int(schedule._k_max)]
+        desc["max_period"] = int(schedule.max_period)
+    else:
+        desc["intervals"] = [int(k) for k in schedule.intervals]
+    return _digest(desc)
+
+
+def defer_manifest(plan, schedule, dp: int, merge_fn,
+                   strides: Sequence[int], settle_mode: str) -> dict:
+    """The durability manifest recorded next to a defer-state checkpoint.
+
+    Carries everything the elastic restore path needs to *settle* restored
+    pendings without reconstructing the old plan: per-deferred-level strides
+    (the replication unit of ``pending[i]`` along the dp axis — one
+    representative per ``stride`` ranks holds the level's combined value),
+    the rank count, the commit period, and how a settled cycle reaches the
+    optimizer (``"mean"`` scalable / ``"reapply"`` idempotent)."""
+    return {
+        "plan": plan_fingerprint(plan, dp, merge_name=merge_fn.name),
+        "schedule": schedule_fingerprint(schedule),
+        "dp": int(dp),
+        "period": int(schedule.period),
+        "level_names": list(schedule.level_names),
+        "strides": [int(s) for s in strides],
+        "settle_mode": str(settle_mode),
+        "overlap": bool(getattr(schedule, "overlap", False)),
+        "merge": merge_fn.name,
+    }
+
+
+def manifests_compatible(saved: Optional[dict], current: Optional[dict]
+                         ) -> bool:
+    """Whether defer state checkpointed under ``saved`` can be restored
+    verbatim into a run described by ``current``. Identity of the compiled
+    plan + schedule + rank count is required — anything else (a different
+    mesh, geometry, cadence, or merge) must go through the elastic settle
+    path."""
+    if saved is None or current is None:
+        return False
+    return (saved.get("plan") == current.get("plan")
+            and saved.get("schedule") == current.get("schedule")
+            and saved.get("dp") == current.get("dp"))
+
+
+def defer_state_spec(params_spec: PyTree, n_levels: int, dp: int,
+                     overlap: bool) -> dict:
+    """ShapeDtypeStruct tree of ``state["defer"]`` for a deferred train step.
+
+    Mirrors ``DeferredTrainStep.init_defer_state`` (launch/steps.py): a step
+    counter, one ``(dp,)``-leading pending per deferred level, and the
+    overlap in-flight double buffer. The durability lint checks a driver's
+    checkpoint tree against this spec (CC040), and the chaos example asserts
+    the spec matches the real step's state keys — so the two definitions
+    cannot drift silently.
+    """
+    if n_levels < 1:
+        raise ValueError(f"n_levels must be >= 1, got {n_levels}")
+
+    def pending_like():
+        return jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((dp,) + tuple(p.shape), p.dtype),
+            params_spec)
+
+    spec = {"t": jax.ShapeDtypeStruct((), jnp.int32),
+            "pending": tuple(pending_like() for _ in range(n_levels))}
+    if overlap:
+        spec["inflight"] = pending_like()
+    return spec

@@ -264,7 +264,9 @@ class DeferredTrainStep:
 
     def __init__(self, variants, schedule: DeferSchedule, init_fn, dp: int,
                  deferred_names: tuple, land_variants=None, flush_fn=None,
-                 topology=None, merge_fn=None, merge_compress: bool = False):
+                 topology=None, merge_fn=None, merge_compress: bool = False,
+                 optimizer=None, strides: Optional[tuple] = None,
+                 settle_mode: Optional[str] = None):
         self.variants = variants
         self.land_variants = land_variants
         self.schedule = schedule
@@ -275,6 +277,9 @@ class DeferredTrainStep:
         self.topology = topology
         self.merge_fn = merge_fn
         self.merge_compress = merge_compress
+        self.optimizer = optimizer
+        self.strides = strides
+        self._settle_mode = settle_mode
 
     @property
     def overlap(self) -> bool:
@@ -324,6 +329,33 @@ class DeferredTrainStep:
             return fns[self.due(state)](state, batch)
 
         return call
+
+    def durability_manifest(self) -> dict:
+        """The checkpoint-recorded identity of this step's defer state
+        (``repro.checkpoint.defer_state``): plan/schedule fingerprints plus
+        the geometry (per-level strides, dp, period, settle mode) the
+        elastic restore path needs to settle restored pendings host-side."""
+        if self.topology is None or self.strides is None:
+            raise ValueError("step was built without its merge topology")
+        from repro.checkpoint.defer_state import defer_manifest
+        return defer_manifest(self.topology, self.schedule, self.dp,
+                              self.merge_fn, self.strides, self._settle_mode)
+
+    def defer_save_extras(self, state) -> dict:
+        """Extras a checkpoint of ``state`` must record so restore can
+        validate (and, on mismatch, settle) the defer state."""
+        return {"defer": self.durability_manifest(),
+                "defer_land_pending": bool(self.land_due(state)),
+                "defer_t": int(state["defer"]["t"])}
+
+    def volatile_spec(self, params_like) -> dict:
+        """The ShapeDtypeStruct tree of ``state["defer"]`` — what a durable
+        checkpoint of this step must cover (analysis CC040)."""
+        from repro.checkpoint.defer_state import defer_state_spec
+        return defer_state_spec(
+            jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
+                         params_like),
+            len(self.deferred_names), self.dp, self.overlap)
 
     def flush(self, state) -> tuple[dict, Optional[dict]]:
         """Final flush: drain everything outstanding at end of run.
@@ -533,7 +565,10 @@ def _make_deferred_train_step(grads_of, optimizer, mesh: Mesh, plan,
     return DeferredTrainStep(variants, schedule, init_defer_state, dp, names,
                              land_variants=land_variants, flush_fn=flush,
                              topology=plan, merge_fn=grad_merge_fn,
-                             merge_compress=merge_compress)
+                             merge_compress=merge_compress,
+                             optimizer=optimizer,
+                             strides=tuple(s.stride for s in deferred),
+                             settle_mode=settle_mode)
 
 
 class LoweredPlan:

@@ -292,7 +292,11 @@ def main() -> None:
             DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                          log_path=args.log),
             step_fn=lambda s, b: jitted(s, b),
-            batch_fn=lambda i: prefetch.get()[1])
+            batch_fn=lambda i: prefetch.get()[1],
+            # deferred runs record the durability manifest next to each
+            # boundary save so a restore under a changed plan/schedule can
+            # settle the pendings (docs/fault_tolerance.md)
+            defer_step=(step_fn if defer_schedule is not None else None))
         try:
             state, end = driver.run(state, start, args.steps - start)
         finally:

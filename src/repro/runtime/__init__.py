@@ -1,1 +1,7 @@
 from repro.runtime.driver import DriverConfig, TrainDriver
+from repro.runtime.elastic import (
+    RestoreReport,
+    effective_invariants,
+    elastic_restore,
+    rescale_hyperparams,
+)

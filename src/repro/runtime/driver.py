@@ -47,6 +47,20 @@ class DriverConfig:
     # sufficient; enable when the step donates its input buffers.
     restore_on_nan: bool = False
     log_path: Optional[str] = None
+    # Durability policy for deferred-commit state (state["defer"], needs a
+    # defer_step): "checkpoint" saves the pending cascade as part of the
+    # state tree with the durability manifest in extras (restore resumes
+    # mid-cycle bitwise); "flush" drains everything outstanding through
+    # DeferredTrainStep.flush BEFORE each save, so the checkpoint carries no
+    # volatile mass at all (the optimizer sequence then differs from an
+    # uninterrupted run — mass-conserving, not bitwise). Either way, no
+    # gradient mass is silently dropped, and the chosen path is logged.
+    defer_save: str = "checkpoint"
+
+    def __post_init__(self):
+        if self.defer_save not in ("checkpoint", "flush"):
+            raise ValueError(f"defer_save must be 'checkpoint' or 'flush', "
+                             f"got {self.defer_save!r}")
 
 
 class TrainDriver:
@@ -54,10 +68,18 @@ class TrainDriver:
     includes everything needed to resume (params, opt state, step count)."""
 
     def __init__(self, cfg: DriverConfig, step_fn: Callable,
-                 batch_fn: Callable[[int], Any]):
+                 batch_fn: Callable[[int], Any],
+                 defer_step=None, optimizer=None):
         self.cfg = cfg
         self.step_fn = step_fn
         self.batch_fn = batch_fn
+        # defer_step: the DeferredTrainStep (or any object with its
+        # durability surface — durability_manifest / defer_save_extras /
+        # flush / init_defer_state) whose state["defer"] this driver must
+        # keep durable. optimizer: used by the elastic resume path to fold
+        # outstanding mass; defaults to defer_step.optimizer.
+        self.defer_step = defer_step
+        self.optimizer = optimizer or getattr(defer_step, "optimizer", None)
         self._preempted = False
         self._step_times: list[float] = []
         self.events: list[dict] = []
@@ -107,6 +129,72 @@ class TrainDriver:
             return float(metrics["loss"])
         return float("nan")
 
+    # ------------------------------------------------------- durability
+
+    def _save_checkpoint(self, state: Any, step: int,
+                         save_extras: Optional[Callable[[int], dict]]) -> Any:
+        """Boundary save under the defer durability policy (cfg.defer_save).
+
+        "checkpoint": the pending cascade rides the state tree; extras carry
+        the durability manifest so restore can validate it (or settle it
+        elastically on a topology change). "flush": everything outstanding
+        is drained into params/opt first and the cycle counter reset, so the
+        checkpoint holds zero volatile mass. Returns the (possibly flushed)
+        state the run must continue from. Both paths log which was taken —
+        no silently dropped mass either way."""
+        cfg = self.cfg
+        extras = {"next_step": step}
+        has_defer = isinstance(state, dict) and "defer" in state
+        if has_defer and self.defer_step is not None:
+            if cfg.defer_save == "flush":
+                state, fmetrics = self.defer_step.flush(state)
+                if fmetrics is not None:
+                    # A flush empties the pendings mid-cycle; restart the
+                    # cycle counter so the next commit sees a full window.
+                    import jax.numpy as jnp
+                    state = dict(state)
+                    state["defer"] = dict(state["defer"],
+                                          t=jnp.zeros((), jnp.int32))
+                self._log({"event": "defer_flush_before_save", "step": step,
+                           "flushed": fmetrics is not None})
+            extras.update(self.defer_step.defer_save_extras(state))
+            self._log({"event": "defer_save", "step": step,
+                       "policy": cfg.defer_save})
+        elif has_defer:
+            # No defer_step: the tree still rides along, but restore cannot
+            # validate it — surface that in the log.
+            self._log({"event": "defer_save", "step": step,
+                       "policy": "checkpoint", "manifest": False})
+        if save_extras:
+            extras.update(save_extras(step))
+        ckpt.save(cfg.ckpt_dir, step, state, extras=extras)
+        self._gc_checkpoints()
+        self._log({"event": "checkpoint", "step": step})
+        return state
+
+    def resume(self, state_like: Any, shardings: Any = None):
+        """Resume from the latest committed checkpoint, elastically.
+
+        Returns ``(state, start_step, report)``; ``(state_like, 0, None)``
+        when no checkpoint exists. With a ``defer_step``, restore goes
+        through :func:`repro.runtime.elastic.elastic_restore`: matching
+        plan/schedule fingerprints restore the pending cascade verbatim
+        (resharded onto ``shardings`` if given); a changed topology settles
+        the outstanding mass into params/opt and re-initializes fresh defer
+        state for the new mesh."""
+        from repro.runtime import elastic
+        if ckpt.latest_step(self.cfg.ckpt_dir) is None:
+            return state_like, 0, None
+        state, extras, report = elastic.elastic_restore(
+            self.cfg.ckpt_dir, state_like, defer_step=self.defer_step,
+            optimizer=self.optimizer, shardings=shardings, log=self._log)
+        start = int(extras.get("next_step", report.step or 0))
+        self._log({"event": "resume", "action": report.action,
+                   "start_step": start,
+                   "includes_defer": isinstance(state, dict)
+                   and "defer" in state})
+        return state, start, report
+
     # ---------------------------------------------------------------- run
 
     def run(self, state: Any, start_step: int, num_steps: int,
@@ -148,6 +236,12 @@ class TrainDriver:
                     if cfg.restore_on_nan and last_good is not None:
                         state, _ = ckpt.restore(cfg.ckpt_dir, state,
                                                 step=last_good)
+                        # The full tree is restored — including any defer
+                        # pendings, so no in-flight mass is zeroed.
+                        self._log({"event": "restore", "step": last_good,
+                                   "includes_defer":
+                                   isinstance(state, dict)
+                                   and "defer" in state})
                     step += 1  # skip-batch policy
                     continue
 
@@ -162,13 +256,8 @@ class TrainDriver:
 
                 boundary = (step % cfg.ckpt_every == 0) or self._preempted
                 if boundary:
-                    extras = {"next_step": step}
-                    if save_extras:
-                        extras.update(save_extras(step))
-                    ckpt.save(cfg.ckpt_dir, step, state, extras=extras)
+                    state = self._save_checkpoint(state, step, save_extras)
                     last_good = step
-                    self._gc_checkpoints()
-                    self._log({"event": "checkpoint", "step": step})
                 if self._preempted:
                     self._log({"event": "preempted_exit", "step": step})
                     break

@@ -1,0 +1,289 @@
+"""Elastic restore for deferred-commit train state.
+
+A checkpoint of a deferred run carries outstanding gradient mass in
+``state["defer"]`` — per-level pendings mid-cycle and (overlapped schedules)
+a launched-but-not-landed in-flight cycle. That state is only meaningful
+under the plan/schedule/rank-count that produced it
+(``repro.checkpoint.defer_state``). This module is the restore path that
+works in *both* worlds:
+
+* fingerprints match → restore verbatim (optionally resharded onto the new
+  mesh via ``restore_resharded`` — the leaves are global arrays, so landing
+  them on fewer or more hosts is just a placement change);
+* fingerprints differ (pod joined/left, K re-solved, plan regeometried) →
+  **settle** the restored pendings host-side into the params/optimizer
+  exactly as ``DeferredTrainStep.flush`` would have, then hand back fresh
+  (identity) defer state for the new topology. No gradient mass is dropped,
+  and the optimizer sees the same delayed-mean semantics it would have seen
+  had the old run flushed before the checkpoint.
+
+The host-side settle must respect the cascade's replication geometry: after
+stage ``i``'s exchange, ``pending[i]`` is replicated within stage ``i``'s
+stride-unit (``ccache`` invariant), so combining the whole ``(dp,)`` leading
+axis would overcount by the replication factor. The durability manifest
+records each level's stride; the settle combines one representative per
+stride-unit (``pending[i][::stride_i]``), which is exact — bitwise for
+integer merges.
+
+``rescale_hyperparams`` is the optimizer-continuity half: a full-commit
+cycle applies the mean of ``K`` steps' gradients once per ``K`` steps, so
+the *per-data-step* effective learning rate is ``lr / K`` and the EMA decay
+per data step is ``beta ** (1/K)``. Changing ``K_old -> K_new`` mid-run
+without touching hyperparameters would change both; rescaling
+
+    lr'    = lr    * (K_new / K_old)
+    beta'  = beta ** (K_new / K_old)        (each of b1, b2)
+
+keeps the per-data-step invariants fixed — property-tested in
+``tests/test_chaos.py`` (identity, composition, invariant preservation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.checkpoint.checkpoint import _flatten_with_paths
+from repro.core import merge_functions
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# defer-aware hyperparameter rescaling
+# ---------------------------------------------------------------------------
+
+
+def rescale_hyperparams(k_old: int, k_new: int, *, lr: float,
+                        b1: float = 0.9, b2: float = 0.95) -> dict:
+    """Rescale (lr, b1, b2) so a K change has no per-data-step discontinuity.
+
+    Returns ``{"lr", "b1", "b2"}``; see module doc for the math. ``k_old ==
+    k_new`` returns the inputs unchanged (exact identity)."""
+    if k_old < 1 or k_new < 1:
+        raise ValueError(f"commit periods must be >= 1, got {k_old}, {k_new}")
+    if k_old == k_new:
+        return {"lr": lr, "b1": b1, "b2": b2}
+    r = k_new / k_old
+    return {"lr": lr * r, "b1": b1 ** r, "b2": b2 ** r}
+
+
+def effective_invariants(k: int, *, lr: float, b1: float = 0.9,
+                         b2: float = 0.95) -> dict:
+    """The per-data-step quantities ``rescale_hyperparams`` preserves."""
+    return {"lr_per_step": lr / k,
+            "b1_per_step": b1 ** (1.0 / k),
+            "b2_per_step": b2 ** (1.0 / k)}
+
+
+# ---------------------------------------------------------------------------
+# host-side settle of restored pendings
+# ---------------------------------------------------------------------------
+
+
+def _join(*parts: str) -> str:
+    return "/".join(p for p in parts if p)
+
+
+def _combine_representatives(leaf: np.ndarray, stride: int,
+                             merge_fn) -> np.ndarray:
+    """Combine one representative per stride-unit of a restored ``(dp, ...)``
+    pending leaf — the exact value the remaining cascade stages would have
+    produced (the intra-unit copies are replicas, not contributions)."""
+    reps = leaf[::stride]
+    return functools.reduce(merge_fn.combine,
+                            [reps[i] for i in range(reps.shape[0])])
+
+
+def settle_pending_leaves(level_leaves: Sequence[Sequence[np.ndarray]],
+                          strides: Sequence[int],
+                          merge_fn) -> list:
+    """Combine restored pendings across ranks and levels, per param leaf.
+
+    ``level_leaves[i][j]`` is deferred level ``i``'s pending for param leaf
+    ``j`` (shape ``(dp,) + leaf_shape``); ``strides[i]`` is that level's
+    replication unit. Returns one settled array per param leaf."""
+    if len(level_leaves) != len(strides):
+        raise ValueError(f"{len(level_leaves)} pending levels but "
+                         f"{len(strides)} strides")
+    n_leaves = len(level_leaves[0])
+    out = []
+    for j in range(n_leaves):
+        per_level = [
+            _combine_representatives(np.asarray(level_leaves[i][j]),
+                                     int(strides[i]), merge_fn)
+            for i in range(len(level_leaves))]
+        out.append(functools.reduce(merge_fn.combine, per_level))
+    return out
+
+
+def _merge_by_name(name: str):
+    for fn in merge_functions.standard_merges():
+        if fn.name == name:
+            return fn
+    raise ValueError(f"checkpointed defer state used merge {name!r}, "
+                     f"which this build does not register — cannot "
+                     f"settle it")
+
+
+# ---------------------------------------------------------------------------
+# elastic restore
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RestoreReport:
+    """What the restore did — the driver logs this verbatim."""
+
+    action: str                    # "fresh" | "verbatim" | "resolved"
+    step: Optional[int] = None
+    flushed_steps: int = 0         # trailing partial-cycle steps settled
+    landed_inflight: bool = False  # an in-flight launched cycle was folded
+    k_old: Optional[int] = None
+    k_new: Optional[int] = None
+    events: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _opt_fold(params, opt_state, settled_leaves, treedef, scale, optimizer):
+    settled = jax.tree.unflatten(treedef, [
+        np.asarray(x) * np.asarray(scale, x.dtype) if scale != 1.0
+        else np.asarray(x) for x in settled_leaves])
+    return optimizer.step(params, settled, opt_state)
+
+
+def elastic_restore(ckpt_dir: str, state_like: PyTree, *,
+                    defer_step=None, optimizer=None,
+                    step: Optional[int] = None,
+                    shardings: Optional[PyTree] = None,
+                    log: Optional[Callable[[dict], None]] = None
+                    ) -> tuple[PyTree, dict, RestoreReport]:
+    """Restore train state, elastically when the defer geometry changed.
+
+    ``state_like`` is the CURRENT run's state template (``{"params", "opt"}``
+    plus ``"defer"`` when ``defer_step`` is given). ``defer_step`` is any
+    object with the deferred-step durability surface —
+    ``durability_manifest()`` and ``init_defer_state(params)``
+    (:class:`~repro.launch.steps.DeferredTrainStep`, or the chaos harness's
+    integer twin). ``optimizer`` is consulted only on the resolved path, to
+    fold outstanding mass; folding uses the OLD run's settle semantics
+    (manifest-recorded), so pass the optimizer whose hyperparameters match
+    the checkpoint — rescale afterwards with :func:`rescale_hyperparams`.
+
+    Returns ``(state, extras, report)``; raises ``FileNotFoundError`` when
+    no committed checkpoint exists (callers start fresh).
+    """
+    emit = log or (lambda rec: None)
+    raw, manifest = ckpt.load_raw(ckpt_dir, step=step)
+    extras = manifest.get("extras", {})
+    found_step = manifest.get("step")
+    saved = extras.get("defer")
+    current = (defer_step.durability_manifest()
+               if defer_step is not None else None)
+
+    def like_matches() -> bool:
+        for k, leaf in _flatten_with_paths(state_like):
+            shp = tuple(getattr(leaf, "shape", ()) or ())
+            if k not in raw or tuple(raw[k].shape) != shp:
+                return False
+        return True
+
+    # Legacy checkpoints (pre-manifest) restore verbatim iff the stored tree
+    # structurally matches the current template — shapes included, so a dp
+    # change can never smuggle mis-replicated pendings through this path.
+    verbatim = (ckpt.manifests_compatible(saved, current)
+                or (saved is None and like_matches()))
+    if saved is None and not verbatim and "defer/t" in raw:
+        raise ValueError(
+            "elastic restore: the checkpoint carries defer state but no "
+            "durability manifest (pre-manifest writer?) and its structure "
+            "does not match the current run — the outstanding mass cannot "
+            "be settled safely; restore it under the original topology and "
+            "flush there first")
+    if verbatim:
+        like = state_like
+        if shardings is not None:
+            state, ex = ckpt.restore_resharded(ckpt_dir, like, shardings,
+                                               step=step)
+        else:
+            state, ex = ckpt.restore(ckpt_dir, like, step=step)
+        report = RestoreReport(action="verbatim", step=found_step,
+                               k_old=saved and saved.get("period"),
+                               k_new=current and current.get("period"))
+        emit({"event": "elastic_restore", "action": "verbatim",
+              "step": found_step})
+        return state, ex, report
+
+    # -- resolved path: geometry changed (or defer-ness changed) ------------
+    base_like = {"params": state_like["params"], "opt": state_like["opt"]}
+    if shardings is not None:
+        base_sh = {"params": shardings["params"], "opt": shardings["opt"]}
+        state, ex = ckpt.restore_resharded(ckpt_dir, base_like, base_sh,
+                                           step=step)
+    else:
+        state, ex = ckpt.restore(ckpt_dir, base_like, step=step)
+
+    report = RestoreReport(action="resolved", step=found_step,
+                           k_old=saved and saved.get("period"),
+                           k_new=current and current.get("period"))
+
+    if saved is not None and "defer/t" in raw:
+        if optimizer is None:
+            raise ValueError(
+                "elastic restore: the checkpoint carries outstanding defer "
+                "state under a different plan/schedule; pass optimizer= so "
+                "it can be settled (dropping it would lose gradient mass)")
+        merge_fn = _merge_by_name(saved["merge"])
+        t = int(np.asarray(raw["defer/t"]))
+        dp_old = int(saved["dp"])
+        period_old = int(saved["period"])
+        strides = [int(s) for s in saved["strides"]]
+        mean = saved["settle_mode"] == "mean"
+        # Leaf paths relative to the params subtree — the same rests the
+        # saved defer/pending/<level>/<rest> keys were built from.
+        rests = [k for k, _ in _flatten_with_paths(base_like["params"])]
+        treedef = jax.tree.structure(state["params"])
+
+        # Fold order mirrors DeferredTrainStep.flush: the in-flight launched
+        # cycle (the OLDER aggregate) first, then the trailing partial cycle.
+        if extras.get("defer_land_pending") and saved.get("overlap"):
+            if_leaves = [raw[_join("defer", "inflight", r)] for r in rests]
+            landed = [_combine_representatives(np.asarray(x), strides[-1],
+                                               merge_fn) for x in if_leaves]
+            scale = 1.0 / (dp_old * period_old) if mean else 1.0
+            state["params"], state["opt"], _ = _opt_fold(
+                state["params"], state["opt"], landed, treedef, scale,
+                optimizer)
+            report.landed_inflight = True
+            emit({"event": "elastic_settle", "what": "inflight",
+                  "scale_steps": period_old})
+
+        m = t % period_old
+        if m > 0:
+            level_leaves = [
+                [raw[_join("defer", "pending", str(i), r)] for r in rests]
+                for i in range(len(strides))]
+            settled = settle_pending_leaves(level_leaves, strides, merge_fn)
+            scale = 1.0 / (dp_old * m) if mean else 1.0
+            state["params"], state["opt"], _ = _opt_fold(
+                state["params"], state["opt"], settled, treedef, scale,
+                optimizer)
+            report.flushed_steps = m
+            emit({"event": "elastic_settle", "what": "pending",
+                  "flushed_steps": m})
+
+    if defer_step is not None:
+        state["defer"] = defer_step.init_defer_state(state["params"])
+
+    emit({"event": "elastic_restore", "action": "resolved",
+          "step": found_step, "flushed_steps": report.flushed_steps,
+          "landed_inflight": report.landed_inflight,
+          "k_old": report.k_old, "k_new": report.k_new})
+    return state, ex, report

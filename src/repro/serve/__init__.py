@@ -9,3 +9,4 @@ compiles once.
 
 from repro.serve.kv import KVConfig, ShardedKV, serving_plan  # noqa: F401
 from repro.serve.frontend import BatchedFrontend, DrainBacklog  # noqa: F401
+from repro.serve.journal import UpdateJournal  # noqa: F401

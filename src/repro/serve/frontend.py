@@ -19,6 +19,7 @@ queue overflows the tick's slots.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from typing import Optional
 
@@ -123,24 +124,42 @@ class BatchedFrontend:
                 for s in range(S) for b in range(B)
                 if (rid := rids[s, b]) >= 0}
 
-    def drain(self, max_steps: Optional[int] = None) -> dict[int, np.ndarray]:
-        """Step until both queues are empty, or raise after ``max_steps``.
+    def drain(self, max_steps: Optional[int] = None, retries: int = 0,
+              backoff_s: float = 0.0) -> dict[int, np.ndarray]:
+        """Step until both queues are empty, or raise after the budget.
 
         Each shard's queue is ONE FIFO (module doc): a step serves at most
         ``slots`` head-of-line adds then at most ``slots`` head-of-line
         gets per shard, so a deep queue needs ``ceil(len / slots)`` steps
         and a bounded drain can legitimately stop with gets still queued.
         Rather than silently returning without those answers, a drain that
-        exhausts ``max_steps`` with requests still queued raises
+        exhausts its budget with requests still queued raises
         :class:`DrainBacklog` carrying the partial results and the
         leftover count — callers that want best-effort batches should loop
         :meth:`step` against :attr:`backlog` themselves.
+
+        ``retries`` grants up to that many further ``max_steps``-step
+        attempts after the first, sleeping ``backoff_s * attempt`` between
+        them (linear backoff — gives a concurrent producer time to stop
+        enqueueing faster than the drain serves). Retrying preserves the
+        FIFO guarantee trivially: the per-shard queues are untouched
+        between attempts, and every attempt's results accumulate into one
+        dict, so a get is still answered after every add that preceded it
+        on its shard. The terminal :class:`DrainBacklog` carries the
+        results and total step count across ALL attempts.
         """
+        if retries < 0 or backoff_s < 0:
+            raise ValueError("retries and backoff_s must be >= 0")
         results: dict[int, np.ndarray] = {}
-        steps = 0
-        while self.backlog and (max_steps is None or steps < max_steps):
-            results.update(self.step())
-            steps += 1
-        if self.backlog:
-            raise DrainBacklog(results, self.backlog, steps)
-        return results
+        total_steps = 0
+        for attempt in range(retries + 1):
+            if attempt:
+                time.sleep(backoff_s * attempt)
+            steps = 0
+            while self.backlog and (max_steps is None or steps < max_steps):
+                results.update(self.step())
+                steps += 1
+            total_steps += steps
+            if not self.backlog:
+                return results
+        raise DrainBacklog(results, self.backlog, total_steps)

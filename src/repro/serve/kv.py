@@ -155,6 +155,40 @@ class KVConfig:
                              f"got {self.spill_blocks}")
 
 
+def _rechunk_records(records, S: int, batch: Optional[int] = None):
+    """Re-chunk journaled ``(keys, vals)`` tick batches for replay into a
+    store with ``S`` shards. When every record already has leading dim
+    ``S`` and one common width (same-shaped store), records pass through
+    untouched — bitwise-identical replay. Otherwise valid entries (key >=
+    0) are flattened, re-padded, and regrouped into uniform ``[S, batch]``
+    ticks (one record may become several); commutativity makes any
+    regrouping settle to the same table."""
+    records = [(np.asarray(k), np.asarray(v)) for k, v in records]
+    if not records:
+        return
+    if (batch is None
+            and all(k.shape[0] == S for k, _ in records)
+            and len({k.shape[1] for k, _ in records}) == 1):
+        yield from records
+        return
+    if batch is None:
+        batch = max([1] + [int(np.ceil((k >= 0).sum() / S))
+                           for k, _ in records])
+    per = S * batch
+    for k, v in records:
+        kf = k.reshape(-1)
+        vf = v.reshape(-1, v.shape[-1])
+        ok = kf >= 0
+        kf, vf = kf[ok], vf[ok]
+        for lo in range(0, max(len(kf), 1), per):
+            ck, cv = kf[lo:lo + per], vf[lo:lo + per]
+            pk = np.full((per,), -1, np.int32)
+            pv = np.zeros((per, v.shape[-1]), v.dtype)
+            pk[:len(ck)] = ck
+            pv[:len(ck)] = cv
+            yield (pk.reshape(S, batch), pv.reshape(S, batch, v.shape[-1]))
+
+
 class ShardedKV:
     """The store.  Host-side driver around per-shard compiled tick/read fns.
 
@@ -302,6 +336,12 @@ class ShardedKV:
         self.inflight = None
         self._land_pending = False
         self._t = 0
+        # durability (journal.py / snapshot / recover): the journal is the
+        # write-ahead log of acknowledged ticks; _replaying suppresses
+        # re-journaling while recovery replays it back through tick().
+        self._journal = None
+        self._dur_root = None
+        self._replaying = False
 
         # -- compiled-once per-shard programs -------------------------------
         self._tick_fns: dict[Any, Callable] = {}
@@ -728,6 +768,11 @@ class ShardedKV:
             self.schedule.observe(int((np.asarray(keys) >= 0).sum()))
         keys = jnp.asarray(keys, jnp.int32)
         vals = jnp.asarray(vals, self.config.dtype)
+        if self._journal is not None and not self._replaying:
+            # Write-ahead: the batch is on disk before any device work, so
+            # a crash at ANY later point in this tick is recoverable —
+            # tick() returning is the acknowledgement point.
+            self._journal.append(keys, vals)
         if self.synchronized:
             self.settled = self._run(self._tick_fns["sync"], self.settled,
                                      keys, vals, donate=(0,))
@@ -891,6 +936,132 @@ class ShardedKV:
         for s in range(self.n_shards):
             out[s::self.n_shards] = parts[s]
         return out
+
+    # ------------------------------------------------------------------
+    # durability: write-ahead journal + flush-consistent snapshots
+    # ------------------------------------------------------------------
+
+    def attach_journal(self, root: str, sync: bool = False) -> None:
+        """Journal every subsequent acknowledged tick under ``root`` (write-
+        ahead, see ``serve.journal``). Call before serving traffic; the
+        snapshot/recover pair below then guarantees zero acknowledged mass
+        is lost to a crash."""
+        from repro.serve.journal import UpdateJournal
+        self._dur_root = root
+        self._journal = UpdateJournal(root, sync=sync)
+
+    def durable_manifest(self) -> dict:
+        """Identity of the durable state (snapshot extras). ``recover``
+        requires the table geometry + merge to match; shard count, engine,
+        and layout may differ — that is the elastic half (the saved table
+        is global, the journal records re-chunk to any shard count)."""
+        from repro.checkpoint.defer_state import (plan_fingerprint,
+                                                  schedule_fingerprint)
+        cfg = self.config
+        return {
+            "n_keys": int(cfg.n_keys), "cols": int(cfg.cols),
+            "dtype": str(jnp.dtype(cfg.dtype)), "merge": cfg.merge.name,
+            "engine": cfg.engine, "n_shards": int(self.n_shards),
+            "partitioned": bool(self.partitioned),
+            "plan": plan_fingerprint(self.plan, self.n_shards,
+                                     merge_name=cfg.merge.name),
+            "schedule": (schedule_fingerprint(self.schedule)
+                         if self.schedule is not None else None),
+        }
+
+    def _check_durable_compat(self, saved: dict) -> None:
+        mine = self.durable_manifest()
+        for k in ("n_keys", "cols", "dtype", "merge"):
+            if saved.get(k) != mine[k]:
+                raise ValueError(
+                    f"recover: snapshot {k}={saved.get(k)!r} does not match "
+                    f"this store's {k}={mine[k]!r} — the settled table is "
+                    f"not interpretable under a different {k}")
+
+    def _install_table(self, table: np.ndarray) -> None:
+        """Land a global ``(n_keys, cols)`` settled table into this store's
+        layout (the inverse of :meth:`table`)."""
+        cfg, S = self.config, self.n_shards
+        if table.shape != (cfg.n_keys, cfg.cols):
+            raise ValueError(f"snapshot table shape {table.shape} != "
+                             f"({cfg.n_keys}, {cfg.cols})")
+        if self.partitioned:
+            parts = np.stack([table[s::S] for s in range(S)])
+            self.settled = jnp.asarray(parts, cfg.dtype)
+        else:
+            self.settled = jnp.broadcast_to(
+                jnp.asarray(table, cfg.dtype), (S,) + table.shape)
+
+    def snapshot(self) -> str:
+        """Persist a flush-consistent snapshot and truncate the journal.
+
+        Flushes (all volatile mass — pendings, ring, cache/spill, an
+        in-flight launch — settles into the table), saves the *global*
+        table via the two-phase-commit checkpoint writer, rotates the
+        journal so replay after this snapshot starts at a fresh segment,
+        and GCs the segments the snapshot made redundant. Crash-safe at
+        every point: until the snapshot commits, the old snapshot + full
+        journal still reconstruct everything."""
+        import os as _os
+        from repro import checkpoint as _ckpt
+        if self._journal is None:
+            raise ValueError("snapshot() needs attach_journal(root) first — "
+                             "without the journal, ticks after the snapshot "
+                             "would be unrecoverable")
+        self.flush()
+        seq = self._journal.segment  # ticks so far live in segments < seq+1
+        snaps = _os.path.join(self._dur_root, "snaps")
+        next_seg = self._journal.rotate()
+        path = _ckpt.save(snaps, seq, {"settled_global": self.table()},
+                          extras={"kv": self.durable_manifest(),
+                                  "segment": next_seg,
+                                  "ticks": int(self._t)})
+        self._journal.gc(next_seg)
+        return path
+
+    def recover(self, root: str, batch: Optional[int] = None,
+                sync: bool = False) -> dict:
+        """Rebuild a crashed store's state from ``root`` and re-attach.
+
+        Loads the latest committed snapshot (if any) into this store's
+        layout, then replays every intact journaled tick since through the
+        normal ``tick`` path. Call on a freshly constructed store; the
+        table geometry + merge must match the snapshot's, but ``n_shards``,
+        ``engine``, and layout may all differ — journal records are
+        re-chunked to this store's shard count (``batch`` overrides the
+        replay tick width; the partitioned kernel engine compiles one
+        fixed shape, so re-chunked replay always uses a uniform batch).
+        After recovery the store's *flushed* table is bitwise-equal to the
+        crashed store's acknowledged history, and the journal is active
+        again for continued serving."""
+        import os as _os
+        from repro import checkpoint as _ckpt
+        from repro.serve.journal import UpdateJournal
+        if self._t:
+            raise ValueError("recover() must run on a fresh store (this "
+                             "one has already ticked)")
+        start_seg = 0
+        report = {"snapshot_step": None, "replayed_ticks": 0}
+        snaps = _os.path.join(root, "snaps")
+        step = (_ckpt.latest_step(snaps) if _os.path.isdir(snaps) else None)
+        if step is not None:
+            raw, manifest = _ckpt.load_raw(snaps, step=step)
+            extras = manifest.get("extras", {})
+            self._check_durable_compat(extras.get("kv", {}))
+            self._install_table(raw["settled_global"])
+            start_seg = int(extras.get("segment", 0))
+            report["snapshot_step"] = step
+        records = list(UpdateJournal.replay(root, start_segment=start_seg))
+        self._replaying = True
+        try:
+            for keys, vals in _rechunk_records(records, self.n_shards,
+                                               batch):
+                self.tick(keys, vals)
+                report["replayed_ticks"] += 1
+        finally:
+            self._replaying = False
+        self.attach_journal(root, sync=sync)
+        return report
 
     def resident_state_bytes(self) -> int:
         """Per-device bytes of long-lived store state: the settled shard

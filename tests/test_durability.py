@@ -1,0 +1,531 @@
+"""Durable deferred state: checkpoint identity, the KV journal, CC040.
+
+The static half of the fault-tolerance contract (docs/fault_tolerance.md):
+defer-state checkpoints round-trip bitwise and carry a durability manifest
+whose fingerprints decide verbatim-vs-elastic restore; the serving tier's
+write-ahead journal + snapshot reproduce the acknowledged update stream
+exactly — through crashes, torn tails, and recovery onto a different
+shard count; CC040 certifies that a driver's checkpoint tree covers a
+step's declared volatile state. (The dynamic half — interrupted runs
+recovering bitwise — is tests/test_chaos.py.)
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.checkpoint import (defer_manifest, defer_state_spec,
+                              manifests_compatible, plan_fingerprint,
+                              schedule_fingerprint, tree_keys)
+from repro.core.defer_schedule import AdaptiveDeferSchedule, DeferSchedule
+from repro.core.merge_functions import ADD, MAX
+from repro.core.merge_plan import MergePlan
+from repro.runtime import chaos
+from repro.serve import (BatchedFrontend, KVConfig, ShardedKV, UpdateJournal,
+                         serving_plan)
+from repro.serve.frontend import DrainBacklog
+from repro.serve.journal import list_segments
+from repro.serve.kv import _rechunk_records
+
+ENV = dict(os.environ, PYTHONPATH=os.pathsep.join(
+    [os.path.abspath("src"), os.environ.get("PYTHONPATH", "")]))
+ENV.pop("XLA_FLAGS", None)
+
+
+def _spmd(fn, *args):
+    return jax.vmap(fn, axis_name="shards")(*args)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trips + key space
+# ---------------------------------------------------------------------------
+
+
+def test_defer_tree_roundtrips_bitwise(tmp_path):
+    step, bf, state = chaos.toy_factory("chip:2,host:2:defer,pod:2:defer",
+                                        (1, 2), 8, width=4,
+                                        overlap=True)()
+    for t in range(3):
+        state, _ = step(state, bf(t))
+    ckpt.save(str(tmp_path), 3, state,
+              extras={"defer_manifest": step.durability_manifest()})
+    step2, _, like = chaos.toy_factory("chip:2,host:2:defer,pod:2:defer",
+                                       (1, 2), 8, width=4, overlap=True)()
+    restored, extras = ckpt.restore(str(tmp_path), like)
+    assert chaos.trees_bitwise_equal(
+        jax.tree.map(np.asarray, restored),
+        jax.tree.map(np.asarray, state))
+    assert manifests_compatible(extras["defer_manifest"],
+                                step2.durability_manifest())
+
+
+def test_tree_keys_and_load_raw(tmp_path):
+    tree = {"params": {"w": np.arange(3, dtype=np.int32)},
+            "defer": {"t": np.int32(2),
+                      "pending": ({"w": np.ones((8, 3), np.int32)},)}}
+    keys = tree_keys(tree)
+    assert "params/w" in keys
+    assert "defer/t" in keys
+    assert "defer/pending/0/w" in keys  # tuple levels flatten to indices
+
+    ckpt.save(str(tmp_path), 0, tree)
+    leaves, manifest = ckpt.load_raw(str(tmp_path))
+    assert sorted(leaves) == sorted(keys)
+    assert np.array_equal(leaves["defer/pending/0/w"],
+                          tree["defer"]["pending"][0]["w"])
+
+
+def test_load_raw_no_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.load_raw(str(tmp_path))
+
+
+def test_defer_state_spec_matches_real_state():
+    """The CC040 spec and the real step state must agree key-for-key and
+    shape-for-shape — the lint is only as honest as this equivalence."""
+    for overlap in (False, True):
+        step, _, state = chaos.toy_factory(
+            "chip:2,host:2:defer,pod:2:defer", (2, 4), 8, width=4,
+            overlap=overlap)()
+        spec = defer_state_spec(
+            jax.eval_shape(lambda: step.init_params()), 2, 8, overlap)
+        assert tree_keys(spec) == tree_keys(state["defer"])
+        real = {k: tuple(v.shape) for k, v in
+                zip(tree_keys(state["defer"]),
+                    jax.tree.leaves(state["defer"]))}
+        want = {k: tuple(v.shape) for k, v in
+                zip(tree_keys(spec), jax.tree.leaves(spec))}
+        assert real == want
+
+
+def test_defer_state_spec_rejects_zero_levels():
+    with pytest.raises(ValueError):
+        defer_state_spec({"w": jax.ShapeDtypeStruct((3,), jnp.int32)},
+                         0, 8, False)
+
+
+# ---------------------------------------------------------------------------
+# fingerprints + manifest compatibility
+# ---------------------------------------------------------------------------
+
+
+def _plan(spec="chip:2,host:2,pod:2:defer"):
+    return MergePlan.parse(spec, lane_parallel=True)
+
+
+def test_plan_fingerprint_stable_and_sensitive():
+    a = plan_fingerprint(_plan(), 8, merge_name=ADD.name)
+    assert a == plan_fingerprint(_plan(), 8, merge_name=ADD.name)
+    assert a != plan_fingerprint(_plan(), 16, merge_name=ADD.name)
+    assert a != plan_fingerprint(_plan(), 8, merge_name=MAX.name)
+    assert a != plan_fingerprint(_plan("chip:2,host:2:defer,pod:2:defer"),
+                                 8, merge_name=ADD.name)
+
+
+def test_schedule_fingerprint_fixed_vs_adaptive():
+    f1 = schedule_fingerprint(DeferSchedule.fixed(2, ("pod",)))
+    assert f1 == schedule_fingerprint(DeferSchedule.fixed(2, ("pod",)))
+    assert f1 != schedule_fingerprint(DeferSchedule.fixed(3, ("pod",)))
+    assert f1 != schedule_fingerprint(
+        DeferSchedule.fixed(2, ("pod",), overlap=True))
+    def adaptive(k_max):
+        return AdaptiveDeferSchedule(_plan(), [64.0, 64.0, 64.0],
+                                     k_min=1, k_max=k_max)
+
+    assert schedule_fingerprint(adaptive(8)) == schedule_fingerprint(
+        adaptive(8))
+    assert schedule_fingerprint(adaptive(8)) != schedule_fingerprint(
+        adaptive(16))
+    assert schedule_fingerprint(adaptive(8)) != f1
+
+
+def test_manifests_compatible_semantics():
+    sched = DeferSchedule.fixed(2, ("pod",))
+    m = defer_manifest(_plan(), sched, 8, ADD, (4,), "mean")
+    assert manifests_compatible(m, dict(m))
+    assert not manifests_compatible(m, None)
+    assert not manifests_compatible(None, m)
+    other = defer_manifest(_plan(), DeferSchedule.fixed(3, ("pod",)),
+                           8, ADD, (4,), "mean")
+    assert not manifests_compatible(m, other)
+    smaller = defer_manifest(_plan(), sched, 4, ADD, (4,), "mean")
+    assert not manifests_compatible(m, smaller)
+
+
+# ---------------------------------------------------------------------------
+# update journal
+# ---------------------------------------------------------------------------
+
+
+def _records(n, S=4, B=3, D=2, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        k = rng.integers(-1, 16, (S, B)).astype(np.int32)
+        v = rng.integers(0, 9, (S, B, D)).astype(np.int32)
+        out.append((k, v))
+    return out
+
+
+def test_journal_roundtrip_and_segments(tmp_path):
+    root = str(tmp_path)
+    j = UpdateJournal(root)
+    recs = _records(3)
+    for k, v in recs[:2]:
+        j.append(k, v)
+    seg0 = j.segment
+    j.rotate()
+    j.append(*recs[2])
+    j.close()
+
+    got = list(UpdateJournal.replay(root))
+    assert len(got) == 3
+    for (k, v), (gk, gv) in zip(recs, got):
+        assert np.array_equal(k, gk) and np.array_equal(v, gv)
+    # replay from the rotated segment skips the first two
+    tail = list(UpdateJournal.replay(root, start_segment=seg0 + 1))
+    assert len(tail) == 1
+    assert np.array_equal(tail[0][0], recs[2][0])
+
+
+def test_journal_new_instance_opens_fresh_segment(tmp_path):
+    root = str(tmp_path)
+    j1 = UpdateJournal(root)
+    j1.append(*_records(1)[0])
+    s1 = j1.segment
+    j1.close()
+    j2 = UpdateJournal(root)  # a restarted writer never appends to old logs
+    assert j2.segment > s1
+    j2.close()
+
+
+def test_journal_gc_drops_old_segments(tmp_path):
+    root = str(tmp_path)
+    j = UpdateJournal(root)
+    j.append(*_records(1)[0])
+    new_seg = j.rotate()
+    j.append(*_records(1, seed=1)[0])
+    dropped = j.gc(new_seg)
+    j.close()
+    assert dropped == 1
+    assert list_segments(root) == [new_seg]
+    assert len(list(UpdateJournal.replay(root))) == 1
+
+
+def test_journal_torn_tail_tolerated(tmp_path):
+    """A crash mid-append leaves a partial record; replay must return every
+    complete record and stop at the tear (that tick never acknowledged)."""
+    root = str(tmp_path)
+    j = UpdateJournal(root)
+    recs = _records(2)
+    for k, v in recs:
+        j.append(k, v)
+    seg = j.segment
+    j.close()
+    with open(os.path.join(root, "segments", f"seg_{seg:08d}.log"),
+              "ab") as f:
+        f.write(b"KVJ1\x40\x00\x00\x00partial")  # framed length, no body
+    got = list(UpdateJournal.replay(root))
+    assert len(got) == 2
+
+
+# ---------------------------------------------------------------------------
+# snapshot / recover
+# ---------------------------------------------------------------------------
+
+
+def _kv_stream(T, S, B, D, R, seed=7):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, R, (T, S, B)).astype(np.int32)
+    keys[:, :, -1] = -1  # exercise padding
+    vals = rng.integers(1, 9, (T, S, B, D)).astype(np.int32)
+    oracle = np.zeros((R, D), np.int64)
+    for t in range(T):
+        m = keys[t] >= 0
+        np.add.at(oracle, keys[t][m], vals[t][m])
+    return keys, vals, oracle.astype(np.int32)
+
+
+def test_recover_replays_to_exact_oracle(tmp_path):
+    S, B, D, R, T = 4, 6, 2, 32, 10
+    keys, vals, oracle = _kv_stream(T, S, B, D, R)
+    root = str(tmp_path)
+    kv = ShardedKV(KVConfig(n_keys=R, cols=D), S, _spmd, commit_every=3)
+    kv.attach_journal(root)
+    for t in range(T // 2):
+        kv.tick(keys[t], vals[t])
+    kv.snapshot()
+    for t in range(T // 2, T):
+        kv.tick(keys[t], vals[t])
+    del kv  # crash: all device state gone
+
+    kv2 = ShardedKV(KVConfig(n_keys=R, cols=D), S, _spmd, commit_every=3)
+    rep = kv2.recover(root)
+    kv2.flush()
+    assert rep["replayed_ticks"] == T - T // 2
+    assert np.array_equal(kv2.table(), oracle)
+
+
+def test_recover_onto_different_shard_count_and_layout(tmp_path):
+    """Commutativity is the license to regroup: a journal written by a
+    4-shard replicated store replays bitwise into an 8-shard partitioned
+    one (different batch geometry, different engine schedule)."""
+    S, B, D, R, T = 4, 6, 2, 64, 8
+    keys, vals, oracle = _kv_stream(T, S, B, D, R, seed=3)
+    root = str(tmp_path)
+    kv = ShardedKV(KVConfig(n_keys=R, cols=D), S, _spmd, commit_every=3)
+    kv.attach_journal(root)
+    for t in range(T):
+        kv.tick(keys[t], vals[t])
+    del kv
+
+    kv2 = ShardedKV(KVConfig(n_keys=R, cols=D, partitioned=True), 2 * S,
+                    _spmd, plan=serving_plan(2 * S, "all"), commit_every=2)
+    kv2.recover(root)
+    kv2.flush()
+    assert np.array_equal(kv2.table(), oracle)
+
+
+def test_recover_without_snapshot_replays_everything(tmp_path):
+    S, B, D, R, T = 2, 4, 1, 16, 5
+    keys, vals, oracle = _kv_stream(T, S, B, D, R, seed=11)
+    root = str(tmp_path)
+    kv = ShardedKV(KVConfig(n_keys=R, cols=D), S, _spmd)
+    kv.attach_journal(root)
+    for t in range(T):
+        kv.tick(keys[t], vals[t])
+    del kv
+    kv2 = ShardedKV(KVConfig(n_keys=R, cols=D), S, _spmd)
+    rep = kv2.recover(root)
+    kv2.flush()
+    assert rep["snapshot_step"] is None
+    assert rep["replayed_ticks"] == T
+    assert np.array_equal(kv2.table(), oracle)
+
+
+def test_recover_refuses_incompatible_store(tmp_path):
+    root = str(tmp_path)
+    kv = ShardedKV(KVConfig(n_keys=16, cols=2), 2, _spmd)
+    kv.attach_journal(root)
+    kv.tick(np.zeros((2, 2), np.int32), np.ones((2, 2, 2), np.int32))
+    kv.snapshot()
+    del kv
+    bad = ShardedKV(KVConfig(n_keys=16, cols=3), 2, _spmd)  # cols differ
+    with pytest.raises(ValueError):
+        bad.recover(root)
+
+
+def test_recover_refuses_nonfresh_store(tmp_path):
+    root = str(tmp_path)
+    kv = ShardedKV(KVConfig(n_keys=16, cols=2), 2, _spmd)
+    kv.attach_journal(root)
+    kv.tick(np.zeros((2, 2), np.int32), np.ones((2, 2, 2), np.int32))
+    kv.snapshot()
+    del kv
+    kv2 = ShardedKV(KVConfig(n_keys=16, cols=2), 2, _spmd)
+    kv2.tick(np.zeros((2, 2), np.int32), np.ones((2, 2, 2), np.int32))
+    with pytest.raises(ValueError):
+        kv2.recover(root)
+
+
+def test_rechunk_passthrough_and_regroup():
+    recs = _records(3, S=4, B=3)
+    # same shard count, uniform width: records pass through untouched
+    out = list(_rechunk_records(recs, 4))
+    assert len(out) == 3
+    for (k, v), (gk, gv) in zip(recs, out):
+        assert np.array_equal(k, gk) and np.array_equal(v, gv)
+    # different shard count: every valid (key, val) pair survives exactly
+    # once, repadded to a uniform [S', batch] geometry
+    out = list(_rechunk_records(recs, 8))
+    want = sorted((int(k), tuple(int(x) for x in v))
+                  for ks, vs in recs
+                  for k, v in zip(ks.ravel(), vs.reshape(-1, 2))
+                  if k >= 0)
+    got = sorted((int(k), tuple(int(x) for x in v))
+                 for ks, vs in out
+                 for k, v in zip(ks.ravel(), vs.reshape(-1, 2))
+                 if k >= 0)
+    assert got == want
+    for ks, vs in out:
+        assert ks.shape[0] == 8 and vs.shape[:2] == ks.shape
+
+
+# ---------------------------------------------------------------------------
+# CC040: checkpoint coverage lint
+# ---------------------------------------------------------------------------
+
+
+def test_cc040_flags_missing_and_misshaped_leaves():
+    from repro.analysis import check_checkpoint_coverage
+    spec = defer_state_spec({"w": jax.ShapeDtypeStruct((3,), jnp.int32)},
+                            2, 8, True)
+    full = {"params": {"w": np.zeros(3, np.int32)}, "defer": spec}
+    assert check_checkpoint_coverage("t", spec, full) == []
+
+    missing = {"params": {"w": np.zeros(3, np.int32)},
+               "defer": {"t": spec["t"], "pending": spec["pending"][:1]}}
+    diags = check_checkpoint_coverage("t", spec, missing)
+    assert diags and all(d.code == "CC040" for d in diags)
+    assert any("pending/1" in d.message for d in diags)
+    assert any("inflight" in d.message for d in diags)
+
+    misshaped = {"defer": {"t": spec["t"],
+                           "pending": ({"w": np.zeros((4, 3), np.int32)},
+                                       spec["pending"][1]),
+                           "inflight": spec["inflight"]}}
+    diags = check_checkpoint_coverage("t", spec, misshaped)
+    assert len(diags) == 1 and "shape" in diags[0].message
+
+
+def test_cc040_step_self_check_clean():
+    from repro.analysis import check_step_durability
+    step, _, state = chaos.toy_factory("chip:2,host:2:defer,pod:2:defer",
+                                       (1, 2), 8, width=4, overlap=True)()
+    assert check_step_durability("toy", step, step.init_params()) == []
+    # a params/opt-only checkpoint tree is the canonical violation
+    bare = {"params": step.init_params(), "opt": {}}
+    diags = check_step_durability("toy", step, step.init_params(), bare)
+    assert diags and all(d.code == "CC040" for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# frontend drain: bounded retry with backoff
+# ---------------------------------------------------------------------------
+
+
+def _frontend(S=2, slots=2):
+    # commit_every=1 -> reads see every prior add (read-your-writes), so
+    # FIFO served order is observable through the returned values
+    kv = ShardedKV(KVConfig(n_keys=64, cols=1), S, _spmd, commit_every=1)
+    return BatchedFrontend(kv, slots_per_shard=slots)
+
+
+def test_drain_retry_extends_budget():
+    fe = _frontend()
+    for i in range(12):           # deep single-shard queue: 6 steps needed
+        fe.add(0, 1)
+    with pytest.raises(DrainBacklog):
+        fe.drain(max_steps=2)
+
+    fe2 = _frontend()
+    for i in range(12):
+        fe2.add(0, 1)
+    out = fe2.drain(max_steps=2, retries=2)  # 3 attempts x 2 steps = enough
+    assert out == {} and fe2.backlog == 0
+
+
+def test_drain_retry_preserves_fifo_and_accumulates(tmp_path):
+    fe = _frontend(S=2, slots=1)
+    fe.add(0, 5)
+    r1 = fe.get(0)
+    fe.add(0, 3)
+    r2 = fe.get(0)
+    out = fe.drain(retries=3, max_steps=1)
+    assert int(out[r1][0]) == 5       # served before the second add
+    assert int(out[r2][0]) == 8       # after both adds, same FIFO order
+    fe.add(0, 1)
+    fe.get(0)
+    with pytest.raises(DrainBacklog) as ei:
+        fe.drain(max_steps=0, retries=2)
+    assert ei.value.backlog == 2
+    assert ei.value.steps == 0        # total across all attempts
+
+
+def test_drain_rejects_negative_knobs():
+    fe = _frontend()
+    with pytest.raises(ValueError):
+        fe.drain(retries=-1)
+    with pytest.raises(ValueError):
+        fe.drain(backoff_s=-0.1)
+
+
+def test_drain_backoff_sleeps_linearly(monkeypatch):
+    from repro.serve import frontend as fe_mod
+    naps = []
+    monkeypatch.setattr(fe_mod.time, "sleep", naps.append)
+    fe = _frontend(S=2, slots=1)
+    for _ in range(8):
+        fe.add(0, 1)
+    with pytest.raises(DrainBacklog):
+        fe.drain(max_steps=1, retries=3, backoff_s=0.5)
+    assert naps == [0.5, 1.0, 1.5]    # backoff_s * attempt
+
+
+# ---------------------------------------------------------------------------
+# elastic placement: restore an 8-rank defer tree on a 4-device mesh
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_restore_resharded_defer_tree_smaller_mesh(tmp_path):
+    """Save a defer-carrying state from an 8-device process, restore it in
+    a 4-device process via restore_resharded: the (dp,)-leading pending
+    leaves are global arrays, so landing them on fewer hosts is only a
+    placement change — values stay bitwise."""
+    save = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro import checkpoint as ckpt
+        from repro.runtime import chaos
+
+        step, bf, state = chaos.toy_factory(
+            "chip:2,host:2:defer,pod:2:defer", (1, 2), 8, width=4,
+            overlap=True)()
+        for t in range(3):
+            state, _ = step(state, bf(t))
+        mesh = jax.make_mesh((8,), ("d",))
+        sh = jax.NamedSharding(mesh, jax.sharding.PartitionSpec("d"))
+        state["defer"] = jax.tree.map(
+            lambda x: jax.device_put(x, sh) if np.ndim(x) and
+            np.shape(x)[0] == 8 else x, state["defer"])
+        ckpt.save({str(tmp_path)!r}, 3, state,
+                  extras={{"defer_manifest": step.durability_manifest()}})
+        np.save({str(tmp_path)!r} + "/w.npy",
+                np.asarray(state["params"]["w"]))
+        print("SAVED")
+    """)
+    restore = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, numpy as np
+        from repro import checkpoint as ckpt
+        from repro.checkpoint import manifests_compatible
+        from repro.runtime import chaos
+
+        step, _, like = chaos.toy_factory(
+            "chip:2,host:2:defer,pod:2:defer", (1, 2), 8, width=4,
+            overlap=True)()
+        mesh = jax.make_mesh((4,), ("d",))
+        repl = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        split = jax.NamedSharding(mesh, jax.sharding.PartitionSpec("d"))
+        shardings = jax.tree.map(
+            lambda x: split if np.ndim(x) and np.shape(x)[0] == 8
+            else repl, like)
+        state, extras = ckpt.restore_resharded(
+            {str(tmp_path)!r}, like, shardings)
+        assert manifests_compatible(extras["defer_manifest"],
+                                    step.durability_manifest())
+        w = np.load({str(tmp_path)!r} + "/w.npy")
+        assert np.array_equal(np.asarray(state["params"]["w"]), w)
+        p0 = state["defer"]["pending"][0]["w"]
+        assert len(p0.sharding.device_set) == 4
+        assert np.asarray(p0).shape[0] == 8
+        print("RESHARDED_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", save], env=ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    assert "SAVED" in r.stdout
+    r = subprocess.run([sys.executable, "-c", restore], env=ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    assert "RESHARDED_OK" in r.stdout
